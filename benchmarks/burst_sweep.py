@@ -1,0 +1,51 @@
+"""Paper Fig 10 / §4.4: burst-length sensitivity (PDP/EDP) + the TPU
+tile-granularity analog sweep."""
+from __future__ import annotations
+
+from benchmarks.common import fmt_table, save
+from repro.configs.registry import get_config
+from repro.core.bursts import (
+    optimal_burst, paper_burst_sweep, tile_sweep_report)
+from repro.core.coverage import enumerate_whisper
+
+PAPER = {8: {"pdp": 44.7, "edp": 2159.3},
+         16: {"pdp": 42.2, "edp": 1511.0},
+         32: {"pdp": 58.6, "edp": 2032.0}}
+
+
+def run() -> dict:
+    pts = paper_burst_sweep(lanes=2)
+    rows = [[p.burst, f"{p.t_main_s:.1f}", f"{p.power_w:.3f}",
+             f"{p.pdp_j:.1f}", f"{PAPER[p.burst]['pdp']:.1f}",
+             f"{p.edp_js:.0f}", f"{PAPER[p.burst]['edp']:.0f}"]
+            for p in pts]
+    print("Fig 10 reproduction — burst sweep (whisper-tiny FP16, 32KB LMM)")
+    print(fmt_table(rows, ["burst", "T_MAIN(s)", "P_sys(W)",
+                           "PDP(J) ours", "paper", "EDP(J*s) ours", "paper"]))
+    best_pdp = optimal_burst(pts, "pdp").burst
+    best_edp = optimal_burst(pts, "edp").burst
+    print(f"PDP-optimal burst: {best_pdp} (paper: 16); "
+          f"EDP-optimal: {best_edp} (paper: 16)")
+
+    # TPU analog: lane-granularity sweep on the tiny workload
+    ms = enumerate_whisper(get_config("whisper-tiny"))
+    tile_rows = []
+    for tp in tile_sweep_report(ms):
+        tile_rows.append([tp.burst, f"{tp.residual_flop_frac:.3f}",
+                          f"{tp.vmem_claim_bytes/2**20:.2f}MiB",
+                          f"{tp.grid_overhead:.2f}", f"{tp.score:.3f}"])
+    print("\nTPU tile-granularity analog (block_k sweep)")
+    print(fmt_table(tile_rows, ["block_k", "residual_flops",
+                                "vmem_claim", "overhead", "PDP-proxy"]))
+    out = {
+        "paper_sweep": [p.__dict__ for p in pts],
+        "pdp_optimal": best_pdp, "edp_optimal": best_edp,
+        "matches_paper": best_pdp == 16 and best_edp == 16,
+        "tile_sweep": [t.__dict__ for t in tile_sweep_report(ms)],
+    }
+    save("burst_sweep", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

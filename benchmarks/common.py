@@ -1,0 +1,42 @@
+"""Shared benchmark plumbing: output locations, timing, result records."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable, Dict
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_DIR = os.path.join(ROOT, "experiments", "bench")
+
+
+def save(name: str, payload: Dict[str, Any]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+def timeit_median(fn: Callable[[], Any], iters: int = 3,
+                  warmup: int = 1) -> float:
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def fmt_table(rows, headers) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(headers)]
+    def line(cells):
+        return "| " + " | ".join(str(c).ljust(w)
+                                 for c, w in zip(cells, widths)) + " |"
+    sep = "|" + "|".join("-" * (w + 2) for w in widths) + "|"
+    return "\n".join([line(headers), sep, *(line(r) for r in rows)])

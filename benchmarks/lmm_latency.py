@@ -1,0 +1,57 @@
+"""Paper Fig 11 / §5.1: LMM size -> projected E2E latency via the coverage
+fallback model, for tiny/base/small x {fp16, q8_0}.
+
+T(budget) = T_host x [uncovered + covered/accel_speedup]; anchored to the
+paper's measured host-only times so absolute seconds are comparable."""
+from __future__ import annotations
+
+from benchmarks.common import fmt_table, save
+from repro.configs.registry import get_config
+from repro.core.coverage import (
+    LMM_SIZES_KB, enumerate_whisper, fallback_time_fraction)
+
+# paper CPU-only anchors (s) for the jfk.wav workload (Fig 8 CPU bars /
+# Table 5 scale): tiny ~11, base ~25, small ~100 (approximate anchors;
+# the *trend* is the reproduction target)
+HOST_ANCHOR_S = {"whisper-tiny": 11.2, "whisper-base": 26.0,
+                 "whisper-small": 110.0}
+# effective covered-kernel speedups, calibrated to the paper's observed
+# system-level gains (Table 5 mean 1.04x; Fig 11 32->256KB gain 1.25x tiny)
+ACCEL = {"fp16": 3.0, "q8_0": 2.5}
+
+
+def run() -> dict:
+    out = {}
+    rows = []
+    for arch, t_host in HOST_ANCHOR_S.items():
+        ms = enumerate_whisper(get_config(arch))
+        for path, acc in ACCEL.items():
+            latencies = [t_host * fallback_time_fraction(ms, kb, acc)
+                         for kb in LMM_SIZES_KB]
+            rows.append([arch, path] + [f"{t:.1f}" for t in latencies])
+            out[f"{arch}/{path}"] = dict(zip(LMM_SIZES_KB, latencies))
+    print("Fig 11 analog — projected E2E latency (s) vs LMM size")
+    print(fmt_table(rows, ["model", "path"] +
+                    [f"{kb}KB" for kb in LMM_SIZES_KB]))
+
+    # headline checks: monotone decrease; base/small big drop at 64KB
+    tiny = out["whisper-tiny/fp16"]
+    small = out["whisper-small/q8_0"]
+    checks = {
+        "monotone": all(tiny[a] >= tiny[b] - 1e-9 for a, b in
+                        zip(LMM_SIZES_KB, LMM_SIZES_KB[1:])),
+        "small_drops_after_32kb": small[64] < small[32],
+        # paper Fig 11: tiny improves 1.25x from 32->256 KB; our
+        # flop-weighted model lands 1.25-2x (same regime, residual slightly
+        # overweighted vs the paper's dot-count weighting)
+        "tiny_32_to_256_regime": 1.0 < tiny[32] / tiny[256] < 2.0,
+    }
+    print("claims:", checks)
+    payload = {"latencies": {k: {str(s): v for s, v in d.items()}
+                             for k, d in out.items()}, "checks": checks}
+    save("lmm_latency", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

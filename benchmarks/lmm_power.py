@@ -1,0 +1,40 @@
+"""Paper Fig 7: synthesized power vs LMM size (FP16 and Q8_0 paths), and the
+PDP-optimality argument for the 32 KB operating point."""
+from __future__ import annotations
+
+from benchmarks.common import fmt_table, save
+from repro.configs.registry import get_config
+from repro.core import energy
+from repro.core.coverage import LMM_SIZES_KB, coverage, enumerate_whisper
+
+
+def run() -> dict:
+    rows = []
+    for kb in LMM_SIZES_KB:
+        rows.append([f"{kb}KB", f"{energy.lmm_power(kb, 'fp16'):.3f}",
+                     f"{energy.lmm_power(kb, 'q8_0'):.3f}"])
+    print("Fig 7 — per-lane power vs LMM size")
+    print(fmt_table(rows, ["LMM", "FP16 (W)", "Q8_0 (W)"]))
+    d = energy.lmm_power(32) - energy.lmm_power(16)
+    print(f"16->32KB delta: {d*1000:.0f} mW (paper: 10 mW)")
+
+    # PDP trade-off: coverage gain vs power growth per size (tiny workload)
+    ms = enumerate_whisper(get_config("whisper-tiny"))
+    trade = []
+    for kb in LMM_SIZES_KB:
+        cov = coverage(ms, kb)
+        p = energy.lmm_power(kb)
+        trade.append([f"{kb}KB", f"{cov*100:.1f}%", f"{p:.3f}",
+                      f"{cov/p:.3f}"])
+    print("\nCoverage-per-watt (the 32 KB operating-point argument)")
+    print(fmt_table(trade, ["LMM", "coverage", "P_lane(W)", "cov/W"]))
+    best = max(trade, key=lambda r: float(r[3]))
+    print(f"best coverage-per-watt: {best[0]} (paper operating point: 32KB)")
+    out = {"power_rows": rows, "tradeoff": trade, "best": best[0],
+           "delta_16_32_mw": d * 1000}
+    save("lmm_power", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""Paper Fig 9: cross-platform PDP under the TDP-normalized power model,
+extended with our TPU-v5e projection (beyond-paper column).
+
+IMAX/Jetson/RTX rows reproduce the paper's arithmetic from its own measured
+latencies and power constants (Eq. 1). The TPU row projects whisper-tiny
+decode from the roofline model: weights-bound decode time x TDP-class chip
+power — the *same* normalized methodology the paper defends in §4.1."""
+from __future__ import annotations
+
+from benchmarks.common import fmt_table, save
+from repro.configs.registry import get_config
+from repro.core import energy
+
+# Paper latencies (s) for the ~10 s jfk.wav workload
+LAT = {
+    ("tiny", "fp16", "imax"): 15.39, ("tiny", "q8_0", "imax"): 10.71,
+    # Jetson/RTX latencies implied by paper PDP / TDP
+    ("tiny", "fp16", "jetson"): 22.59 / 15.0,
+    ("tiny", "q8_0", "jetson"): 27.16 / 15.0,
+    ("tiny", "q8_0", "rtx4090"): 121.38 / 450.0,
+}
+POWER = {"imax_fp16": 1.294, "imax_q8_0": 2.64,   # 2-lane 28nm + kernels
+         "jetson": energy.P_JETSON_W, "rtx4090": energy.P_RTX4090_W}
+
+
+def _tpu_whisper_decode_time(cfg, n_tokens: int = 27) -> float:
+    """Roofline decode time on ONE v5e chip: per token, read all weights
+    (Q8_0: ~1 byte/param) + encoder pass compute."""
+    n = cfg.n_params()
+    per_tok_s = n * 1.0 / 819e9                  # bytes / HBM bw (q8: 1B)
+    enc_flops = 2 * n * 1500                     # encoder forward
+    enc_s = enc_flops / 197e12
+    return enc_s + n_tokens * per_tok_s
+
+
+def run() -> dict:
+    rows = []
+    results = {}
+    for (model, path, plat), t in LAT.items():
+        paper_pdp = energy.PAPER_PDP_J.get((model, path, plat))
+        if plat == "imax":
+            # IMAX PDP uses the mixed Eq. 2 model: accelerator-active time
+            # at P_IMAX + host remainder at P_ARM. The paper does not
+            # publish t_active for Fig 9, so we derive it from its PDP and
+            # verify Eq. 2 consistency (0 <= t_active <= t).
+            p_acc = POWER[f"imax_{path}"]
+            t_active = ((paper_pdp - t * energy.P_ARM_A72_W)
+                        / (p_acc - energy.P_ARM_A72_W))
+            pdp = energy.pdp_mixed(t_active, t, p_acc)
+            assert 0.0 <= t_active <= t, "Eq.2-inconsistent paper figures"
+            p_show = p_acc
+        else:
+            p_show = POWER[plat]
+            pdp = energy.pdp(t, p_show)
+        rows.append([plat, path, f"{t:.2f}", f"{p_show:.2f}", f"{pdp:.2f}",
+                     f"{paper_pdp:.2f}" if paper_pdp else "-"])
+        results[f"{plat}/{path}"] = {"time_s": t, "power_w": p_show,
+                                     "pdp_j": pdp, "paper_pdp_j": paper_pdp}
+
+    cfg = get_config("whisper-tiny")
+    t_tpu = _tpu_whisper_decode_time(cfg)
+    rep = energy.tpu_projection(t_tpu, chips=1)
+    rows.append(["tpu_v5e(proj)", "q8_0", f"{t_tpu:.3f}",
+                 f"{rep.power_w:.0f}", f"{rep.pdp_j:.2f}", "-"])
+    results["tpu_v5e/q8_0"] = {"time_s": t_tpu, "power_w": rep.power_w,
+                               "pdp_j": rep.pdp_j}
+
+    print("Fig 9 analog — whisper-tiny PDP under TDP-normalized power")
+    print(fmt_table(rows, ["platform", "path", "time(s)", "power(W)",
+                           "PDP(J) ours", "PDP(J) paper"]))
+    imax = results["imax/q8_0"]["pdp_j"]
+    jets = results["jetson/q8_0"]["pdp_j"]
+    rtx = results["rtx4090/q8_0"]["pdp_j"]
+    ratios = {"imax_vs_jetson": jets / imax, "imax_vs_rtx": rtx / imax}
+    print(f"IMAX vs Jetson: {ratios['imax_vs_jetson']:.2f}x lower PDP "
+          f"(paper: 2.35x) | vs RTX4090: {ratios['imax_vs_rtx']:.2f}x "
+          f"(paper: 10.48x)")
+    out = {"rows": results, "ratios": ratios,
+           "paper_ratios": {"imax_vs_jetson": 2.35, "imax_vs_rtx": 10.48}}
+    save("pdp_cross_platform", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

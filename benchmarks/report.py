@@ -1,0 +1,97 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the JSON
+records under experiments/dryrun/.
+
+  PYTHONPATH=src python -m benchmarks.report [--mesh pod_16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRYRUN_DIR = os.path.join(ROOT, "experiments", "dryrun")
+
+ARCH_ORDER = ["llava-next-mistral-7b", "jamba-v0.1-52b", "mamba2-780m",
+              "phi3-mini-3.8b", "qwen1.5-110b", "internlm2-20b",
+              "qwen2.5-14b", "whisper-tiny", "arctic-480b", "olmoe-1b-7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str, variant: str = "") -> Dict[tuple, dict]:
+    out = {}
+    for path in glob.glob(os.path.join(DRYRUN_DIR, mesh, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("variant", "") != variant:
+            continue
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def _g(b):
+    return f"{b/2**30:.2f}"
+
+
+def roofline_table(mesh: str, variant: str = "") -> str:
+    rows = [
+        "| arch | shape | status | compute(s) | memory(s) | collective(s) | "
+        "bound | step_s | useful | roofline | arg(GiB) | temp(GiB) |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    cells = load(mesh, variant)
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = cells.get((arch, shape))
+            if r is None:
+                rows.append(f"| {arch} | {shape} | MISSING | | | | | | | | |")
+                continue
+            if r["status"] == "skip":
+                rows.append(f"| {arch} | {shape} | skip (sub-quadratic "
+                            f"attn required) | | | | | | | | |")
+                continue
+            if r["status"] == "error":
+                rows.append(f"| {arch} | {shape} | ERROR | | | | | | | | |")
+                continue
+            rf, m = r["roofline"], r["memory"]
+            rows.append(
+                f"| {arch} | {shape} | ok | {rf['compute_s']:.4f} | "
+                f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+                f"{rf['bottleneck']} | {rf['step_s']:.4f} | "
+                f"{rf['useful_flop_ratio']:.2f} | "
+                f"{rf['roofline_fraction']:.4f} | "
+                f"{_g(m['argument_bytes'])} | {_g(m['temp_bytes'])} |")
+    return "\n".join(rows)
+
+
+def summary(mesh: str, variant: str = "") -> dict:
+    cells = load(mesh, variant)
+    n_ok = sum(1 for r in cells.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in cells.values() if r["status"] == "skip")
+    n_err = sum(1 for r in cells.values() if r["status"] == "error")
+    worst = sorted(
+        ((r["roofline"]["roofline_fraction"], k)
+         for k, r in cells.items() if r["status"] == "ok"))
+    coll_bound = [(k, r["roofline"]["collective_s"])
+                  for k, r in cells.items()
+                  if r["status"] == "ok"
+                  and r["roofline"]["bottleneck"] == "collective"]
+    return {"ok": n_ok, "skip": n_skip, "error": n_err,
+            "worst_roofline": worst[:5],
+            "collective_bound": sorted(coll_bound, key=lambda x: -x[1])[:5]}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod_16x16")
+    ap.add_argument("--variant", default="")
+    args = ap.parse_args(argv)
+    print(roofline_table(args.mesh, args.variant))
+    print()
+    print(json.dumps(summary(args.mesh, args.variant), indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark driver: ``PYTHONPATH=src python -m benchmarks.run [--fast]``.
+
+One module per paper table/figure (DESIGN.md §8 index). Results print as
+tables and persist under experiments/bench/*.json; EXPERIMENTS.md cites
+them. ``--fast`` skips the two wall-clock-heavy whisper-full runs."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    burst_sweep, coverage_cdf, exec_breakdown, lmm_latency, lmm_power,
+    multi_utterance, pdp_cross_platform, profile_shares, q8_reconstruction)
+
+SUITES = [
+    ("q8_reconstruction (§4.2)", q8_reconstruction.run, False),
+    ("coverage_cdf (Table 2/6)", coverage_cdf.run, False),
+    ("burst_sweep (Fig 10)", burst_sweep.run, False),
+    ("lmm_power (Fig 7)", lmm_power.run, False),
+    ("lmm_latency (Fig 11)", lmm_latency.run, False),
+    ("pdp_cross_platform (Fig 9)", pdp_cross_platform.run, False),
+    ("exec_breakdown (Fig 12)", exec_breakdown.run, False),
+    ("profile_shares (Fig 4)", profile_shares.run, True),
+    ("multi_utterance (Table 4/5)", multi_utterance.run, True),
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip wall-clock-heavy whisper-full benches")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark name")
+    args = ap.parse_args(argv)
+
+    failures = []
+    for name, fn, heavy in SUITES:
+        if args.fast and heavy:
+            print(f"\n=== {name} === SKIPPED (--fast)")
+            continue
+        if args.only and args.only not in name:
+            continue
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[{time.time()-t0:.1f}s] ok")
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} benchmark(s) FAILED:", failures)
+        return 1
+    print("\nall benchmarks passed; JSON in experiments/bench/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

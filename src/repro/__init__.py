@@ -1,0 +1,3 @@
+"""repro: Whisper dot-product kernel offloading (CGLA paper) re-targeted as a
+multi-pod JAX/Pallas TPU framework. See DESIGN.md."""
+__version__ = "0.1.0"

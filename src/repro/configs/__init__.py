@@ -1,0 +1,9 @@
+from repro.configs.base import (  # noqa: F401
+    ALL_SHAPES, DECODE_32K, LONG_500K, PREFILL_32K, SHAPES_BY_NAME, TRAIN_4K,
+    ModelConfig, MoEConfig, OptimizerConfig, RunConfig, ShapeConfig, SSMConfig,
+    reduced, shape_applicable,
+)
+from repro.configs.registry import (  # noqa: F401
+    ALL_ARCHS, ASSIGNED, EXTRA, dryrun_cells, get_config, get_shape,
+    get_smoke_config,
+)

@@ -1,0 +1,330 @@
+"""Config system: frozen dataclasses describing models, shapes, and runs.
+
+Every assigned architecture gets one module in this package exporting
+``CONFIG`` (full-size, dry-run only) and ``SMOKE`` (reduced, runs on CPU).
+``registry.py`` wires them into ``--arch <id>`` selection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model families
+# ---------------------------------------------------------------------------
+DENSE = "dense"
+MOE = "moe"
+SSM = "ssm"
+HYBRID = "hybrid"
+AUDIO = "audio"   # encoder-decoder with stubbed conv frontend
+VLM = "vlm"       # decoder-only LM backbone with stubbed vision frontend
+
+FAMILIES = (DENSE, MOE, SSM, HYBRID, AUDIO, VLM)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block parameters."""
+    num_experts: int
+    experts_per_token: int
+    d_ff: int                    # per-expert hidden dim
+    dense_residual_d_ff: int = 0 # arctic: dense MLP running in parallel
+    router_jitter: float = 0.0
+    load_balance_coef: float = 0.01
+    capacity_factor: float = 1.25  # used by dropping EP dispatch path
+    # GShard-style dispatch group: tokens are routed within groups of this
+    # size, so the dispatch one-hot is (G, Tg, E, Cg) with Cg ~ Tg*k*cf/E —
+    # linear in total tokens. Without grouping the dispatch einsum is
+    # O(T^2) and dominates the expert GEMMs at train_4k scale.
+    dispatch_group: int = 512
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 / SSD block parameters."""
+    d_state: int                 # N (ssm state per head channel)
+    d_conv: int = 4
+    expand: int = 2              # d_inner = expand * d_model
+    head_dim: int = 64           # P; n_heads = d_inner // head_dim
+    n_groups: int = 1
+    chunk: int = 64              # SSD chunk length for the blocked scan
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One architecture. All full-size configs are dry-run-only."""
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0            # 0 -> d_model // num_heads
+    # Megatron-style embedding pad: table/readout built at vocab_size +
+    # vocab_pad so the vocab dim shards on the model axis; pad columns are
+    # masked out of CE and argmax. Model is mathematically unchanged.
+    vocab_pad: int = 0
+
+    # --- block options ---
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    act: str = "swiglu"          # swiglu | gelu
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    pos_embedding: str = "rope"  # rope | learned | sinusoidal
+
+    # --- MoE ---
+    moe: Optional[MoEConfig] = None
+    moe_every: int = 1           # apply MoE FFN to layers where (i % moe_every == moe_offset)
+    moe_offset: int = 0
+
+    # --- SSM / hybrid ---
+    ssm: Optional[SSMConfig] = None
+    attn_every: int = 1          # hybrid: attention at layers where (i % attn_every == attn_offset)
+    attn_offset: int = 0         # others use SSM mixer. attn_every==1 -> all attention.
+
+    # --- encoder-decoder (audio) ---
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    encoder_ctx: int = 1500      # whisper n_audio_ctx (frames after conv stride 2)
+    n_mels: int = 80
+
+    # --- VLM frontend stub ---
+    vision_patches: int = 0      # patches prepended as precomputed embeddings
+    vision_embed_dim: int = 0    # raw patch embedding dim before projector
+
+    # --- numerics ---
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+
+    # --- paper technique knobs (first-class feature) ---
+    quant: str = "none"          # none | q8_0  (weights for serving path)
+    vmem_budget_kb: int = 32_768 # VMEM budget claimed by offloaded tiles (KB). 32 MiB? no:
+                                 # v5e VMEM is ~16 MiB/core -> soft budget in KB, see core/coverage.
+    burst: int = 256             # lane-granularity analog of paper burst length
+
+    # --- training ---
+    remat: str = "full"          # none | full | dots  (activation checkpoint policy)
+    scan_layers: bool = True     # lax.scan over the layer stack
+    # attention implementation: "chunked" (q-chunked full-row softmax — the
+    # baseline) | "flash" (k-blocked online softmax — beyond-paper §Perf
+    # optimization of the memory roofline term)
+    attn_impl: str = "chunked"
+    # decode KV-cache storage: "none" (model dtype) | "q8" (int8 + per-head
+    # scale — the paper's quantization applied to decode's dominant bytes)
+    kv_quant: str = "none"
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
+        assert self.family in FAMILIES, self.family
+        if self.family in (MOE,):
+            assert self.moe is not None
+        if self.family in (SSM, HYBRID):
+            assert self.ssm is not None
+        if self.family == AUDIO:
+            assert self.is_encoder_decoder
+
+    @property
+    def padded_vocab(self) -> int:
+        return self.vocab_size + self.vocab_pad
+
+    # ----- derived quantities used by coverage / roofline -----
+    @property
+    def attention_layers(self) -> Tuple[int, ...]:
+        if self.family == SSM:
+            return ()
+        if self.family == HYBRID:
+            return tuple(i for i in range(self.num_layers)
+                         if i % self.attn_every == self.attn_offset)
+        return tuple(range(self.num_layers))
+
+    @property
+    def moe_layers(self) -> Tuple[int, ...]:
+        if self.moe is None:
+            return ()
+        return tuple(i for i in range(self.num_layers)
+                     if i % self.moe_every == self.moe_offset)
+
+    @property
+    def uses_full_attention(self) -> bool:
+        """True when every token attends over the whole sequence in all mixer
+        layers -> long_500k is inapplicable per the brief."""
+        return self.family not in (SSM, HYBRID)
+
+    def n_params(self) -> int:
+        """Total parameter count (embedding included once)."""
+        return sum(int(p) for p in self._param_terms().values())
+
+    def n_active_params(self) -> int:
+        """Active-per-token parameters (MoE: top-k experts only)."""
+        terms = self._param_terms()
+        total = sum(int(v) for v in terms.values())
+        if self.moe is not None:
+            total -= int(terms["moe_experts"])
+            frac = self.moe.experts_per_token / self.moe.num_experts
+            total += int(terms["moe_experts"] * frac)
+        return int(total)
+
+    def _param_terms(self) -> dict:
+        d, dff, V = self.d_model, self.d_ff, self.vocab_size
+        hq, hkv, hd = self.num_heads, self.num_kv_heads, self.head_dim
+        attn = d * (hq * hd) + 2 * d * (hkv * hd) + (hq * hd) * d
+        ffn_mults = 3 if self.act == "swiglu" else 2
+        dense_ffn = ffn_mults * d * dff
+        terms = {"embed": V * d, "head": 0 if self.tie_embeddings else V * d}
+        n_attn = len(self.attention_layers)
+        n_layers = self.num_layers + (self.num_encoder_layers if self.is_encoder_decoder else 0)
+        if self.is_encoder_decoder:
+            # decoder cross-attention adds another attn block per decoder layer
+            terms["attn"] = attn * (self.num_encoder_layers + 2 * self.num_layers)
+            terms["ffn"] = dense_ffn * n_layers
+        else:
+            terms["attn"] = attn * n_attn
+            moe_l = set(self.moe_layers)
+            dense_l = [i for i in range(self.num_layers) if i not in moe_l]
+            terms["ffn"] = dense_ffn * len(dense_l)
+            if self.moe is not None:
+                e_ffn = ffn_mults * d * self.moe.d_ff
+                terms["moe_experts"] = e_ffn * self.moe.num_experts * len(moe_l)
+                terms["router"] = d * self.moe.num_experts * len(moe_l)
+                if self.moe.dense_residual_d_ff:
+                    terms["ffn"] += ffn_mults * d * self.moe.dense_residual_d_ff * len(moe_l)
+            if self.ssm is not None:
+                di = self.ssm.d_inner(d)
+                nh = self.ssm.n_heads(d)
+                ssm_l = self.num_layers - n_attn if self.family == HYBRID else self.num_layers
+                # in_proj (z,x,B,C,dt) + out_proj + conv + A,D
+                per = d * (2 * di + 2 * self.ssm.n_groups * self.ssm.d_state + nh) \
+                    + di * d + self.ssm.d_conv * (di + 2 * self.ssm.n_groups * self.ssm.d_state) \
+                    + 2 * nh
+                terms["ssm"] = per * ssm_l
+        terms["norms"] = 2 * d * n_layers + d
+        return terms
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned): every LM arch gets all four; skips per DESIGN.md §4
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+
+def shape_applicable(model: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Return (applicable, reason-if-not) per the assignment rules."""
+    if shape.name == "long_500k" and model.uses_full_attention:
+        return False, ("long_500k needs sub-quadratic attention; "
+                       f"{model.name} is pure full-attention (skip per brief)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Run config (training hyperparams; used by trainer and examples)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    grad_compress: str = "none"  # none | int8_ef
+    # Optimizer-moment storage: float32 | bfloat16 | q8_0. q8_0 reuses the
+    # paper's block format for an 8-bit-Adam-style 4x moment-memory cut —
+    # required to fit arctic-480b training on a 256-chip v5e pod.
+    state_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    seed: int = 0
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    max_restarts: int = 3
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Family-preserving reduction for smoke tests: tiny layers/width/experts."""
+    d_model = min(cfg.d_model, 64)
+    if cfg.num_heads == 0:       # attention-free (SSM)
+        num_heads = num_kv = 0
+    else:
+        num_heads = min(cfg.num_heads, 4)
+        num_kv = max(1, min(cfg.num_kv_heads, num_heads))
+        # keep the GQA-vs-MHA character: preserve ratio when possible
+        if cfg.num_kv_heads < cfg.num_heads:
+            num_kv = max(1, num_heads // max(1, cfg.num_heads // cfg.num_kv_heads))
+    base = dict(
+        name=cfg.name + "-smoke",
+        family=cfg.family,
+        num_layers=min(cfg.num_layers, 2),
+        d_model=d_model,
+        num_heads=num_heads,
+        num_kv_heads=num_kv,
+        head_dim=d_model // num_heads if num_heads else 16,
+        d_ff=min(cfg.d_ff, 128) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        norm=cfg.norm, act=cfg.act, qkv_bias=cfg.qkv_bias,
+        rope_theta=cfg.rope_theta, tie_embeddings=cfg.tie_embeddings,
+        pos_embedding=cfg.pos_embedding,
+        moe_every=cfg.moe_every, moe_offset=cfg.moe_offset,
+        attn_every=min(cfg.attn_every, 2), attn_offset=min(cfg.attn_offset, 1),
+        is_encoder_decoder=cfg.is_encoder_decoder,
+        num_encoder_layers=min(cfg.num_encoder_layers, 2),
+        encoder_ctx=min(cfg.encoder_ctx, 32),
+        n_mels=min(cfg.n_mels, 8),
+        vision_patches=min(cfg.vision_patches, 8),
+        vision_embed_dim=min(cfg.vision_embed_dim, 32),
+        dtype="float32", param_dtype="float32",
+        quant=cfg.quant, burst=128,
+        remat="none", scan_layers=False,
+    )
+    if cfg.moe is not None:
+        base["moe"] = MoEConfig(
+            num_experts=min(cfg.moe.num_experts, 4),
+            experts_per_token=min(cfg.moe.experts_per_token, 2),
+            d_ff=min(cfg.moe.d_ff, 64),
+            dense_residual_d_ff=min(cfg.moe.dense_residual_d_ff, 64)
+            if cfg.moe.dense_residual_d_ff else 0,
+        )
+    if cfg.ssm is not None:
+        base["ssm"] = SSMConfig(
+            d_state=min(cfg.ssm.d_state, 16), d_conv=cfg.ssm.d_conv,
+            expand=2, head_dim=16, n_groups=1, chunk=8,
+        )
+    base.update(overrides)
+    return ModelConfig(**base)

@@ -1,0 +1,27 @@
+"""mamba2-780m [arXiv:2405.21060; unverified]
+
+[ssm] 48L d_model=1536 (attn-free) d_ff=0 vocab=50280, ssm_state=128 —
+SSD (state-space duality) blocked scan. d_inner = 2*1536 = 3072,
+head_dim=64 -> 48 SSD heads.
+"""
+from repro.configs.base import ModelConfig, SSMConfig, reduced
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    num_layers=48,
+    d_model=1536,
+    num_heads=0,                 # attention-free
+    num_kv_heads=0,
+    head_dim=64,
+    d_ff=0,                      # no FFN; mixer IS the block
+    vocab_size=50_280,
+    vocab_pad=8,              # -> %16==0 so the readout shards on the model axis
+    norm="rmsnorm",
+    act="swiglu",
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64,
+                  n_groups=1, chunk=256),
+    quant="q8_0",
+)
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,28 @@
+"""whisper-base.en — paper's scaling study (§4.3/§5). Not an assigned cell;
+used by the coverage/PDP scaling benchmarks (Table 6, Fig 9/11)."""
+from repro.configs.base import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    num_layers=6,
+    num_encoder_layers=6,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51_865,
+    vocab_pad=7,              # -> %16==0 so the readout shards on the model axis
+    norm="layernorm",
+    act="gelu",
+    qkv_bias=True,
+    pos_embedding="learned",
+    tie_embeddings=True,
+    is_encoder_decoder=True,
+    encoder_ctx=1500,
+    n_mels=80,
+    quant="q8_0",
+)
+
+SMOKE = reduced(CONFIG)

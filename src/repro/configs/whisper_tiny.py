@@ -1,0 +1,32 @@
+"""whisper-tiny — the paper's primary workload. [arXiv:2212.04356; unverified]
+
+Assigned spec: [audio] 4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865,
+encoder-decoder with conv frontend STUB (input_specs() provides precomputed
+80-mel frame embeddings after the conv stride-2 frontend).
+"""
+from repro.configs.base import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    num_layers=4,               # decoder layers
+    num_encoder_layers=4,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=51_865,
+    vocab_pad=7,              # -> %16==0 so the readout shards on the model axis
+    norm="layernorm",
+    act="gelu",
+    qkv_bias=True,              # whisper uses biases (k_proj bias absent; modeled uniform)
+    pos_embedding="learned",
+    tie_embeddings=True,
+    is_encoder_decoder=True,
+    encoder_ctx=1500,
+    n_mels=80,
+    quant="q8_0",               # the paper's Q8_0 serving path is first-class here
+)
+
+SMOKE = reduced(CONFIG)

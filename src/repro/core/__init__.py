@@ -1,0 +1,9 @@
+"""The paper's primary contribution as a composable feature set: Q8_0
+quantization (qformats), local-memory coverage co-design (coverage),
+burst/tile granularity selection (bursts), mixed aligned/residual execution
+(mixed_exec), the offload dispatcher (offload), the PDP/EDP energy model
+(energy) and the Amdahl profiling analysis (amdahl)."""
+from repro.core.qformats import (  # noqa: F401
+    QBLOCK, QTensor, dequantize_q8_0, dequantize_tree, quantize_q8_0,
+    quantize_tree, reconstruction_error,
+)

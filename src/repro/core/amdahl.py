@@ -1,0 +1,68 @@
+"""Amdahl's-Law analysis of the dot-product bottleneck (paper §1, Fig 4).
+
+The paper profiles Whisper-tiny.en on a Cortex-A72: the dot-product kernel is
+90.6 % (FP16) / 87.1 % (Q8_0) of CPU time, bounding single-kernel offload at
+10.6x / 7.8x. ``profile_shares`` measures the same split for our JAX whisper
+implementation on this container's CPU by timing the model with the GEMM path
+ablated (matmuls replaced by O(1) stand-ins) versus intact.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+# Paper's measured FP16/Q8_0 dot-product shares (Fig 4)
+PAPER_SHARE = {"fp16": 0.906, "q8_0": 0.871}
+
+
+def amdahl_speedup(offload_fraction: float, kernel_speedup: float) -> float:
+    """System speedup when ``offload_fraction`` of time runs kernel_speedup x
+    faster."""
+    if not 0.0 <= offload_fraction <= 1.0:
+        raise ValueError("fraction must be in [0,1]")
+    if kernel_speedup <= 0:
+        raise ValueError("speedup must be positive")
+    return 1.0 / ((1.0 - offload_fraction) + offload_fraction / kernel_speedup)
+
+
+def amdahl_bound(offload_fraction: float) -> float:
+    """Theoretical maximum (kernel_speedup -> inf): 1/(1-f).
+    f=0.906 -> 10.6x (FP16); f=0.871 -> 7.8x (Q8_0) — paper §1."""
+    if offload_fraction >= 1.0:
+        return float("inf")
+    return 1.0 / (1.0 - offload_fraction)
+
+
+def timeit_median(fn: Callable[[], object], iters: int = 5,
+                  warmup: int = 2) -> float:
+    """Median wall-clock seconds of fn() with warmup (blocks on jax arrays)."""
+    import jax
+    for _ in range(warmup):
+        r = fn()
+        jax.block_until_ready(r) if hasattr(r, "block_until_ready") or isinstance(
+            r, (list, tuple, dict)) else None
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn()
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def profile_shares(full_fn: Callable[[], object],
+                   nogemm_fn: Callable[[], object],
+                   iters: int = 5) -> Dict[str, float]:
+    """Dot-product share = (T_full - T_nogemm)/T_full. The ablation keeps
+    softmax/norms/elementwise ops and removes only mul_mat work, mirroring
+    the paper's per-op profile."""
+    t_full = timeit_median(full_fn, iters)
+    t_rest = timeit_median(nogemm_fn, iters)
+    share = max(0.0, min(1.0, (t_full - t_rest) / t_full))
+    return {
+        "t_full_s": t_full,
+        "t_rest_s": t_rest,
+        "dot_share": share,
+        "amdahl_bound": amdahl_bound(share),
+    }

@@ -1,0 +1,111 @@
+"""Burst-length (execution-granularity) selection (paper §3.2, §4.4, Fig 10).
+
+Two layers:
+
+1. **Paper reproduction** — `paper_burst_sweep()` recomputes PDP/EDP for
+   bursts {8,16,32} from the paper's measured T_MAIN and synthesized powers
+   via Eq. 2/3, confirming burst 16 is PDP- and EDP-optimal (42.2 J /
+   1511 J*s).
+
+2. **TPU analog** — `tile_sweep_report()` evaluates the lane-granularity
+   analog {128,256,512} for our Pallas kernels: residual fraction from the
+   workload's vector-length distribution (the alignment term), VMEM claim
+   per tile (the LMM term), and a grid-overhead model (the per-burst
+   invocation overhead term). `core/offload.py` consumes the chosen point.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+from repro.core import energy
+from repro.core.coverage import MulMat
+from repro.core.mixed_exec import residual_fraction
+
+PAPER_BURSTS = (8, 16, 32)
+TPU_TILE_BURSTS = (128, 256, 512)   # MXU-lane analog of 8/16/32 (DESIGN.md §6.4)
+
+
+@dataclass(frozen=True)
+class BurstPoint:
+    burst: int
+    t_main_s: float
+    t_active_s: float
+    power_w: float
+    pdp_j: float
+    edp_js: float
+
+
+def _t_active(burst: int, t_main: float) -> float:
+    """Derive the accelerator-active time from the calibration in §4.4:
+    the measured burst-16 point gives T_active = 21.2 s out of 35.8 s; the
+    active fraction scales with the per-burst execution efficiency."""
+    # Active work is the offloaded GEMM; its time scales ~ (1 + c/burst)
+    # against the burst-16 anchor (per-invocation overhead amortization).
+    t16_active = 21.2
+    c = 8.0  # overhead constant fit to the 8->16 latency drop
+    rel = (1.0 + c / burst) / (1.0 + c / 16.0)
+    return min(t16_active * rel, t_main)
+
+
+def paper_burst_sweep(lanes: int = 2) -> List[BurstPoint]:
+    """Fig 10 reproduction from the paper's measured times + powers."""
+    out = []
+    for b in PAPER_BURSTS:
+        tm = energy.BURST_T_MAIN_S[b]
+        ta = _t_active(b, tm)
+        p_sys = energy.system_power_burst(b, lanes)
+        out.append(BurstPoint(
+            burst=b, t_main_s=tm, t_active_s=ta, power_w=p_sys,
+            pdp_j=energy.pdp_mixed(ta, tm, p_sys),
+            edp_js=energy.edp_mixed(ta, tm, p_sys),
+        ))
+    return out
+
+
+def optimal_burst(points: Sequence[BurstPoint], metric: str = "pdp") -> BurstPoint:
+    key = (lambda p: p.pdp_j) if metric == "pdp" else (lambda p: p.edp_js)
+    return min(points, key=key)
+
+
+# ---------------------------------------------------------------------------
+# TPU tile-granularity analog
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TilePoint:
+    burst: int                 # lane tile (block_k)
+    residual_flop_frac: float  # work stuck on the VPU/jnp path
+    vmem_claim_bytes: int      # per-tile VMEM working set (x, w, out, acc)
+    grid_overhead: float       # relative per-invocation overhead ~ 1 + c/b
+    score: float               # lower is better (PDP-proxy)
+
+
+def tile_sweep_report(mulmats: Sequence[MulMat],
+                      block_m: int = 128, block_n: int = 256,
+                      bursts: Sequence[int] = TPU_TILE_BURSTS,
+                      dtype_bytes: int = 1) -> List[TilePoint]:
+    """Score each candidate lane granularity on the workload's vector-length
+    distribution. Mirrors the paper's three-way trade-off: bigger bursts
+    amortize overhead but strand more residual work and claim more VMEM.
+    ``dtype_bytes=1`` for the Q8_0 weight path."""
+    total_flops = sum(m.flops for m in mulmats) or 1
+    out = []
+    for b in bursts:
+        resid = sum(m.flops * residual_fraction(m.k, b) for m in mulmats) / total_flops
+        # VMEM claim per grid step: x tile (bm x bk, bf16) + w tile (bn x bk, q8)
+        # + scales + f32 accumulator + out tile.
+        vmem = (block_m * b * 2 + block_n * b * dtype_bytes +
+                block_n * (b // 32) * 4 + block_m * block_n * 4 * 2)
+        over = 1.0 + 128.0 / b
+        # PDP proxy: host-residual work costs ~8x the accel path (Amdahl
+        # kernel speedup), overhead multiplies accel time, VMEM claim is a
+        # constraint (hard-penalize > 75% of 16 MiB v5e VMEM).
+        accel = (1.0 - resid) * over
+        host = resid * 8.0
+        penalty = 1e6 if vmem > 0.75 * 16 * 2**20 else 0.0
+        out.append(TilePoint(b, resid, vmem, over, accel + host + penalty))
+    return out
+
+
+def select_tile_burst(mulmats: Sequence[MulMat], **kw) -> int:
+    return min(tile_sweep_report(mulmats, **kw), key=lambda p: p.score).burst

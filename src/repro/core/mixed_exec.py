@@ -1,0 +1,101 @@
+"""Mixed execution (paper §3.2): burst-aligned main segment on the
+accelerator, residual on the host — the accelerator never sees a partial
+burst.
+
+Paper: each vector of length L splits into a main segment of ⌊L/b⌋·b
+(offloaded to IMAX) and a residual of L mod b (run concurrently on the ARM
+host). On TPU the same split removes tile padding: the main segment feeds the
+Pallas/MXU kernel with exactly-full tiles; the residual is a skinny jnp
+contraction on the VPU. The two partial sums add — bit-compatible with the
+monolithic oracle in f32.
+
+For Whisper's static dims (384, 1536, 64 — all multiples of 16/128 after the
+lane re-scaling of DESIGN.md §2) the residual is empty, which is exactly the
+paper's zero-residual claim for the principal kernels.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.qformats import QBLOCK, QTensor
+
+
+def split_point(length: int, burst: int) -> int:
+    """⌊L/b⌋·b — the aligned main-segment length."""
+    if burst <= 0:
+        raise ValueError("burst must be positive")
+    return (length // burst) * burst
+
+
+def split_aligned(length: int, burst: int) -> Tuple[int, int]:
+    """(main_len, residual_len) with main_len % burst == 0."""
+    m = split_point(length, burst)
+    return m, length - m
+
+
+def mixed_matmul(x: jnp.ndarray,
+                 w: jnp.ndarray,
+                 burst: int,
+                 main_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]):
+    """y = x @ w.T with the K-contraction split at the burst boundary.
+
+    x: (..., K); w: (N, K).  ``main_fn`` runs the aligned segment (the
+    accelerator path); the residual always runs as a plain jnp contraction
+    (the host path). Returns f32.
+    """
+    k = x.shape[-1]
+    k_main, k_res = split_aligned(k, burst)
+    parts = []
+    if k_main:
+        parts.append(main_fn(x[..., :k_main], w[:, :k_main]))
+    if k_res:
+        parts.append(jnp.einsum("...k,nk->...n",
+                                x[..., k_main:].astype(jnp.float32),
+                                w[:, k_main:].astype(jnp.float32)))
+    if not parts:
+        return jnp.zeros((*x.shape[:-1], w.shape[0]), jnp.float32)
+    out = parts[0]
+    for p in parts[1:]:
+        out = out + p
+    return out
+
+
+def mixed_matmul_q8(x: jnp.ndarray,
+                    wq: QTensor,
+                    burst: int,
+                    main_fn) -> jnp.ndarray:
+    """Quantized variant. ``burst`` must be a multiple of the Q8_0 block (32)
+    so the main segment covers whole quantization blocks (the paper's bursts
+    of 16 elements hold whole 8-bit packed words for the same reason)."""
+    if burst % QBLOCK != 0:
+        raise ValueError(f"burst {burst} must be a multiple of QBLOCK={QBLOCK}")
+    k = x.shape[-1]
+    k_main, k_res = split_aligned(k, burst)
+    nb = k_main // QBLOCK
+    parts = []
+    if k_main:
+        main_q = QTensor(qs=wq.qs[..., :nb, :], scales=wq.scales[..., :nb])
+        parts.append(main_fn(x[..., :k_main], main_q))
+    if k_res:
+        # residual weights dequantized on the host path
+        tail_q = QTensor(qs=wq.qs[..., nb:, :], scales=wq.scales[..., nb:])
+        w_tail = tail_q.qs.astype(jnp.float32) * tail_q.scales[..., None]
+        w_tail = w_tail.reshape(*w_tail.shape[:-2], k_res)
+        parts.append(jnp.einsum("...k,nk->...n",
+                                x[..., k_main:].astype(jnp.float32), w_tail))
+    if not parts:
+        return jnp.zeros((*x.shape[:-1], wq.shape[0]), jnp.float32)
+    out = parts[0]
+    for p in parts[1:]:
+        out = out + p
+    return out
+
+
+def residual_fraction(length: int, burst: int) -> float:
+    """Fraction of work left on the host path (paper §3.2's three-way
+    trade-off: larger bursts raise this for non-aligned lengths)."""
+    if length == 0:
+        return 0.0
+    return (length % burst) / length

@@ -1,0 +1,82 @@
+"""Offload dispatcher — the paper's co-design loop as a runtime feature.
+
+Given a linear layer's shapes and the configured VMEM budget + burst, decide
+per-invocation (like IMAX's per-``ggml_mul_mat`` decision) whether the main
+segment runs on the accelerator kernel or falls back to the host/XLA path,
+and account the PDP consequences. This is the glue between:
+
+  coverage.py  (does the working set fit the local-memory budget?)
+  bursts.py    (which granularity minimizes the PDP proxy?)
+  mixed_exec   (aligned main + residual split)
+  kernels.ops  (the actual compute paths)
+  energy.py    (PDP/EDP accounting per step)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.coverage import MulMat, fits
+from repro.core.mixed_exec import split_aligned
+from repro.core.qformats import QTensor
+from repro.kernels import ops
+
+
+@dataclass
+class OffloadStats:
+    """Per-run accounting (feeds the Fig 12 exec-breakdown benchmark)."""
+    offloaded_calls: int = 0
+    fallback_calls: int = 0
+    offloaded_flops: int = 0
+    fallback_flops: int = 0
+    residual_flops: int = 0
+    by_kernel: Dict[str, int] = field(default_factory=dict)
+
+    def offload_rate(self) -> float:
+        t = self.offloaded_calls + self.fallback_calls
+        return self.offloaded_calls / t if t else 0.0
+
+    def offload_flop_rate(self) -> float:
+        t = self.offloaded_flops + self.fallback_flops
+        return self.offloaded_flops / t if t else 0.0
+
+
+@dataclass
+class OffloadEngine:
+    """The dispatcher. ``vmem_budget_kb`` is the LMM-size analog (per-core
+    VMEM claim allowed for one invocation's working set; agg_units=1 on TPU);
+    ``burst`` is the lane granularity from the burst sweep."""
+    vmem_budget_kb: int = 8 * 1024      # half of v5e's ~16 MiB VMEM
+    burst: int = 256
+    prefer_pallas: Optional[bool] = None
+    interpret: Optional[bool] = None
+    stats: OffloadStats = field(default_factory=OffloadStats)
+
+    def should_offload(self, m: int, k: int, n: int, name: str = "linear") -> bool:
+        mm = MulMat(name, m=m, k=k, n=n)
+        return fits(mm, self.vmem_budget_kb, optimized=True, agg_units=1)
+
+    def linear(self, x: jax.Array, w, name: str = "linear") -> jax.Array:
+        """y = x @ W^T with per-invocation offload decision + accounting."""
+        k = x.shape[-1]
+        n = w.shape[0] if not isinstance(w, QTensor) else w.shape[0]
+        m = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
+        flops = 2 * m * k * n
+        k_main, k_res = split_aligned(k, self.burst)
+        offload = self.should_offload(m, k, n, name)
+        if offload:
+            self.stats.offloaded_calls += 1
+            self.stats.offloaded_flops += flops * k_main // max(k, 1)
+            self.stats.residual_flops += flops * k_res // max(k, 1)
+            y = ops.matmul(x, w, burst=self.burst,
+                           prefer_pallas=self.prefer_pallas,
+                           interpret=self.interpret)
+        else:
+            self.stats.fallback_calls += 1
+            self.stats.fallback_flops += flops
+            y = ops.matmul(x, w, burst=self.burst, prefer_pallas=False)
+        self.stats.by_kernel[name] = self.stats.by_kernel.get(name, 0) + 1
+        return y

@@ -1,0 +1,112 @@
+"""GGML-compatible Q8_0 block quantization (paper §3.2, §4.2).
+
+Q8_0: blocks of 32 values; per-block scale d = amax/127 stored in fp16;
+quantized values q = round(x/d) in int8. The paper consumes whisper.cpp's
+Q8_0 data unmodified; we implement the same format so the reconstruction
+error figures of §4.2 (MAE 1.39e-4, RMSE 2.09e-4, max 3.41e-3 and relative
+L2 8.31e-3 on Whisper-tiny.en FP16 weights) are directly checkable.
+
+Storage convention for a weight matrix W[N, K] (out_features, in_features):
+  qs:     int8  [N, K//32, 32]   (kernels consume the flattened [N, K] view)
+  scales: f32   [N, K//32]       (values round-trip through fp16, as GGML)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QBLOCK = 32  # GGML Q8_0 block size
+
+
+class QTensor(NamedTuple):
+    """A Q8_0-quantized tensor. Leading dims arbitrary; last dim blocked."""
+    qs: jax.Array        # int8, shape (..., K//QBLOCK, QBLOCK)
+    scales: jax.Array    # f32 (fp16-valued), shape (..., K//QBLOCK)
+
+    @property
+    def k(self) -> int:
+        return self.qs.shape[-2] * self.qs.shape[-1]
+
+    @property
+    def shape(self):
+        return (*self.qs.shape[:-2], self.k)
+
+    def flat_qs(self) -> jax.Array:
+        """int8 view with blocks flattened back into K: shape (..., K)."""
+        return self.qs.reshape(*self.qs.shape[:-2], self.k)
+
+    def nbytes(self) -> int:
+        # int8 payload + fp16 scale per block (GGML block_q8_0 = 34 bytes/32)
+        return int(np.prod(self.qs.shape)) + 2 * int(np.prod(self.scales.shape))
+
+
+def quantize_q8_0(w: jax.Array) -> QTensor:
+    """Quantize along the last axis in blocks of 32. K must divide by 32."""
+    *lead, k = w.shape
+    if k % QBLOCK != 0:
+        raise ValueError(f"K={k} not a multiple of {QBLOCK}; pad or use "
+                         "mixed_exec.split_aligned for the residual")
+    blocks = w.astype(jnp.float32).reshape(*lead, k // QBLOCK, QBLOCK)
+    amax = jnp.max(jnp.abs(blocks), axis=-1)
+    d = (amax / 127.0).astype(jnp.float16).astype(jnp.float32)  # GGML stores fp16
+    inv = jnp.where(d > 0, 1.0 / d, 0.0)
+    # GGML roundf() is round-half-away-from-zero
+    q = blocks * inv[..., None]
+    q = jnp.sign(q) * jnp.floor(jnp.abs(q) + 0.5)
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return QTensor(qs=q, scales=d)
+
+
+def dequantize_q8_0(t: QTensor) -> jax.Array:
+    """Exact inverse map (float32)."""
+    w = t.qs.astype(jnp.float32) * t.scales[..., None]
+    return w.reshape(t.shape)
+
+
+def reconstruction_error(w: jax.Array, t: QTensor) -> dict:
+    """The §4.2 error metrics for a single tensor (or a flattened stack)."""
+    w = w.astype(jnp.float32)
+    wh = dequantize_q8_0(t)
+    err = wh - w
+    mae = jnp.mean(jnp.abs(err))
+    rmse = jnp.sqrt(jnp.mean(err ** 2))
+    mx = jnp.max(jnp.abs(err))
+    rel_l2 = jnp.linalg.norm(err.reshape(-1)) / (jnp.linalg.norm(w.reshape(-1)) + 1e-30)
+    return {"mae": float(mae), "rmse": float(rmse),
+            "max_abs": float(mx), "rel_l2": float(rel_l2),
+            "n_values": int(np.prod(w.shape))}
+
+
+def quantize_tree(params, predicate=None):
+    """Quantize every >=2D float leaf whose last dim divides QBLOCK.
+
+    ``predicate(path, leaf) -> bool`` can veto quantization (e.g. keep norms,
+    embeddings in fp16 — mirroring whisper.cpp, which keeps 1D tensors fp32).
+    Returns a pytree where quantized leaves become QTensor.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+
+    def decide(path, leaf):
+        if not isinstance(leaf, (jax.Array, np.ndarray)):
+            return leaf
+        if leaf.ndim < 2 or leaf.shape[-1] % QBLOCK != 0:
+            return leaf
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        if predicate is not None and not predicate(path, leaf):
+            return leaf
+        return quantize_q8_0(leaf)
+
+    leaves = [decide(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def dequantize_tree(params):
+    """Inverse of quantize_tree (QTensor leaves -> f32 arrays)."""
+    return jax.tree_util.tree_map(
+        lambda x: dequantize_q8_0(x) if isinstance(x, QTensor) else x,
+        params, is_leaf=lambda x: isinstance(x, QTensor))

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataCursor, SyntheticLMStream, SyntheticMelStream, make_stream,
+)

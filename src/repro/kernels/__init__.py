@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (the dot-product
+kernels it offloads): q8_matmul, bf16_matmul, q8_matvec + jit wrappers (ops)
+and pure-jnp oracles (ref)."""
+from repro.kernels.ops import matmul  # noqa: F401
+from repro.kernels.bf16_matmul import bf16_matmul  # noqa: F401
+from repro.kernels.q8_matmul import q8_matmul, vmem_claim_bytes  # noqa: F401
+from repro.kernels.q8_matvec import q8_matvec  # noqa: F401

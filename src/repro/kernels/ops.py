@@ -1,0 +1,120 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Path selection (DESIGN.md §6.3): on TPU the Pallas kernels run natively; on
+this CPU container they run in ``interpret=True`` for correctness tests, and
+the model/dry-run path uses the XLA implementation of the *same* dequant
+math (``ref.py`` semantics). ``matmul`` is the single entry point the model
+zoo calls; it handles leading batch dims, the mixed-execution split, and the
+sublane padding for skinny decode batches.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mixed_exec import mixed_matmul, mixed_matmul_q8
+from repro.core.qformats import QBLOCK, QTensor
+from repro.kernels import ref
+from repro.kernels.bf16_matmul import bf16_matmul
+from repro.kernels.q8_matmul import q8_matmul
+from repro.kernels.q8_matvec import q8_matvec
+
+Weight = Union[jax.Array, QTensor]
+
+_SUBLANE = 8  # f32 min sublane tile on TPU
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _flatten_leading(x: jax.Array):
+    lead = x.shape[:-1]
+    m = int(np.prod(lead)) if lead else 1
+    return x.reshape(m, x.shape[-1]), lead
+
+
+def _pad_m(x: jax.Array, mult: int = _SUBLANE):
+    m = x.shape[0]
+    pad = (-m) % mult
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, m
+
+
+def _pallas_q8_main(x2d: jax.Array, wq: QTensor, interpret: bool,
+                    block_k: int) -> jax.Array:
+    """Aligned-segment Q8_0 path: matvec variant for skinny M, tiled matmul
+    otherwise. Handles M/N padding so the kernel only sees full tiles."""
+    qs2d = wq.flat_qs()
+    n, k = qs2d.shape
+    xp, m = _pad_m(x2d)
+    mp = xp.shape[0]
+    if mp <= 2 * _SUBLANE:
+        # decode: N tiled at 512 when divisible, else largest divisor tile
+        bn = _largest_tile(n, 512)
+        out = q8_matvec(xp, qs2d, wq.scales, block_n=bn, interpret=interpret)
+    else:
+        bm = _largest_tile(mp, 128)
+        bn = _largest_tile(n, 256)
+        bk = _largest_tile(k, block_k, mult=QBLOCK)
+        out = q8_matmul(xp, qs2d, wq.scales, block_m=bm, block_n=bn,
+                        block_k=bk, interpret=interpret)
+    return out[:m]
+
+
+def _pallas_bf16_main(x2d: jax.Array, w: jax.Array, interpret: bool,
+                      block_k: int) -> jax.Array:
+    xp, m = _pad_m(x2d)
+    mp = xp.shape[0]
+    n, k = w.shape
+    bm = _largest_tile(mp, 128)
+    bn = _largest_tile(n, 256)
+    bk = _largest_tile(k, block_k)
+    return bf16_matmul(xp, w, block_m=bm, block_n=bn, block_k=bk,
+                       interpret=interpret)[:m]
+
+
+def _largest_tile(dim: int, cap: int, mult: int = 1) -> int:
+    """Largest t <= cap with t % mult == 0 and dim % t == 0."""
+    t = min(cap, dim)
+    while t > 1 and (dim % t or (mult > 1 and t % mult)):
+        t -= mult if mult > 1 and t % mult == 0 else 1
+    return max(t, 1)
+
+
+def matmul(x: jax.Array, w: Weight, *,
+           burst: int = 256,
+           prefer_pallas: Optional[bool] = None,
+           interpret: Optional[bool] = None,
+           block_k: int = 256) -> jax.Array:
+    """y = x @ W^T for dense or Q8_0 weights, via the paper's mixed-execution
+    split. x: (..., K); W: (N, K) array or QTensor. Returns (..., N) f32.
+
+    prefer_pallas=None -> pallas on TPU, XLA elsewhere (dry-run lowers XLA).
+    """
+    if prefer_pallas is None:
+        prefer_pallas = _on_tpu()
+    if interpret is None:
+        interpret = not _on_tpu()
+    x2d, lead = _flatten_leading(x)
+
+    if isinstance(w, QTensor):
+        if prefer_pallas:
+            main = functools.partial(_pallas_q8_main, interpret=interpret,
+                                     block_k=block_k)
+            out = mixed_matmul_q8(x2d, w, burst, main)
+        else:
+            out = mixed_matmul_q8(x2d, w, burst, ref.q8_matmul_ref)
+    else:
+        if prefer_pallas:
+            main = functools.partial(_pallas_bf16_main, interpret=interpret,
+                                     block_k=block_k)
+            out = mixed_matmul(x2d, w, burst, main)
+        else:
+            out = mixed_matmul(x2d, w, burst, ref.matmul_bf16_ref)
+    return out.reshape(*lead, out.shape[-1])

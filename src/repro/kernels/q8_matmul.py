@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: Q8_0 block-dequant matmul (the paper's Q8_0 dot-product
+kernel, §3.2 Fig 6, re-tiled for the MXU).
+
+IMAX streams 34-byte Q8_0 blocks through a 46-PE lane with packed int8 MACs
+(OP_SML8) and pipeline adds (OP_AD32). The TPU-native mapping (DESIGN.md §2):
+
+* HBM traffic stays int8 + per-block scales — the 2x footprint cut is the
+  whole point of the paper's Q8_0 path and directly halves the *memory*
+  roofline term for decode.
+* Dequantization happens inside VMEM (the LMM analog) right before the MXU
+  contraction, like IMAX's inline dequant on ALU3 — no dedicated conversion
+  pass, no dequantized weights ever resident in HBM.
+* The grid pipelines HBM->VMEM copies against compute (the LMM's
+  hardware-managed double buffering).
+* ``block_k`` is the burst-length analog; it must divide by 32 (whole Q8_0
+  blocks per burst — the paper picks bursts holding whole packed words).
+
+Layouts:
+  x:      (M, K)   bf16/f32 activations
+  qs:     (N, K)   int8   (Q8_0 payload, blocks flattened)
+  scales: (N, K//32) f32  (fp16-valued)
+  out:    (M, N)   f32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.qformats import QBLOCK
+
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 256
+DEFAULT_BLOCK_K = 256   # burst analog; VMEM claim scales with it
+
+
+def _q8_matmul_kernel(x_ref, q_ref, s_ref, o_ref, acc_ref):
+    """One (i, j, k) grid step: acc += x_tile @ dequant(q_tile, s_tile)^T."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)                  # (bm, bk)
+    q = q_ref[...]                                      # (bn, bk) int8
+    s = s_ref[...]                                      # (bn, bk//32) f32
+    bn, bk = q.shape
+    # In-VMEM block dequant: expand each per-32 scale across its block.
+    w = q.astype(jnp.float32).reshape(bn, bk // QBLOCK, QBLOCK) * s[..., None]
+    w = w.reshape(bn, bk)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def q8_matmul(x: jax.Array, qs: jax.Array, scales: jax.Array, *,
+              block_m: int = DEFAULT_BLOCK_M,
+              block_n: int = DEFAULT_BLOCK_N,
+              block_k: int = DEFAULT_BLOCK_K,
+              interpret: bool = False) -> jax.Array:
+    """x (M,K) x Q8_0 W (N,K) -> (M,N) f32. Shapes must tile exactly —
+    callers route ragged sizes through core.mixed_exec (the paper's
+    main/residual split), so the kernel never sees a partial burst."""
+    m, k = x.shape
+    n, k2 = qs.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch {k} vs {k2}")
+    if block_k % QBLOCK:
+        raise ValueError("block_k must hold whole Q8_0 blocks")
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(f"({m},{n},{k}) not tiled by "
+                         f"({block_m},{block_n},{block_k})")
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        _q8_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_n, block_k), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((block_n, block_k // QBLOCK), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(x, qs, scales)
+
+
+def vmem_claim_bytes(block_m: int = DEFAULT_BLOCK_M,
+                     block_n: int = DEFAULT_BLOCK_N,
+                     block_k: int = DEFAULT_BLOCK_K,
+                     x_bytes: int = 2) -> int:
+    """The VMEM working set this tiling claims (the LMM-sizing analog):
+    double-buffered x/q/s tiles + f32 accumulator + out tile."""
+    db = 2  # pallas pipeline double-buffers inputs
+    return (db * (block_m * block_k * x_bytes            # x tile
+                  + block_n * block_k                    # int8 payload
+                  + block_n * (block_k // QBLOCK) * 4)   # scales
+            + block_m * block_n * 4                      # accumulator
+            + block_m * block_n * 4)                     # out tile

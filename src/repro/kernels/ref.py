@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These definitions are the single source of truth for kernel semantics; the
+Pallas kernels and the XLA fallback paths are tested allclose against them.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.qformats import QTensor
+
+
+def matmul_f32_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """y[M,N] = x[M,K] @ w[N,K]^T, f32 accumulation."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32).T,
+                   preferred_element_type=jnp.float32)
+
+
+def matmul_bf16_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """The paper's FP16 kernel semantics: 16-bit operands, inline-converted,
+    fp32 accumulated (IMAX ALU2 conversion + SIMD FMA -> MXU bf16xbf16->f32)."""
+    return jnp.dot(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16).T,
+                   preferred_element_type=jnp.float32)
+
+
+def q8_matmul_ref(x: jnp.ndarray, wq: QTensor) -> jnp.ndarray:
+    """The paper's Q8_0 kernel semantics: per-32-block dequant then f32 MAC.
+    x: (M, K); wq: QTensor over W[N, K]. Returns (M, N) f32."""
+    w = wq.qs.astype(jnp.float32) * wq.scales[..., None]       # (N, K/32, 32)
+    w = w.reshape(wq.shape)                                     # (N, K)
+    return jnp.dot(x.astype(jnp.float32), w.T,
+                   preferred_element_type=jnp.float32)
+
+
+def q8_matvec_ref(x: jnp.ndarray, wq: QTensor) -> jnp.ndarray:
+    """Decode-path dot product: x (B, K) against quantized W[N, K]."""
+    return q8_matmul_ref(x, wq)

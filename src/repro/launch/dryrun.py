@@ -1,0 +1,333 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes and extract memory/cost/collective evidence.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-mini-3.8b \
+      --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Cells lower ``train_step`` (train_4k) or ``serve_step`` (decode_32k /
+long_500k) or ``forward`` (prefill_32k). Results (memory analysis, cost
+analysis, parsed collectives, roofline terms) are written as JSON under
+experiments/dryrun/<mesh>/<arch>__<shape>[__variant].json; EXPERIMENTS.md's
+tables are generated from those files.
+
+Per-arch training overrides (microbatching / optimizer-moment dtype) keep
+the big cells inside v5e HBM — they are part of the *system config*, not
+hacks: every real deployment of a 480B MoE on 256 chips does exactly this.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (
+    ModelConfig, OptimizerConfig, ShapeConfig, shape_applicable)
+from repro.configs.registry import ALL_SHAPES, ASSIGNED, get_config, get_shape
+from repro.core.qformats import quantize_tree
+from repro.launch import input_specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_lib
+from repro.roofline.analysis import analyze_compiled
+from repro.sharding import rules as shard_rules
+from repro.sharding import ctx as shard_ctx
+from repro.train.step import init_train_state, make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# ---------------------------------------------------------------------------
+# Per-arch training memory configs (documented in EXPERIMENTS.md §Dry-run).
+# microbatches: gradient-accumulation splits of the global batch.
+# state_dtype: optimizer-moment storage (q8_0 = the paper's block format).
+# ---------------------------------------------------------------------------
+TRAIN_OVERRIDES: Dict[str, Dict[str, Any]] = {
+    "arctic-480b":            {"microbatches": 16, "state_dtype": "q8_0",
+                               "grad_accum_dtype": "bfloat16"},
+    "qwen1.5-110b":           {"microbatches": 8, "state_dtype": "bfloat16"},
+    "jamba-v0.1-52b":         {"microbatches": 8},
+    "olmoe-1b-7b":            {"microbatches": 8},
+    "llava-next-mistral-7b":  {"microbatches": 4},
+    "internlm2-20b":          {"microbatches": 4},
+    "qwen2.5-14b":            {"microbatches": 4},
+    "phi3-mini-3.8b":         {"microbatches": 4},
+    "mamba2-780m":            {"microbatches": 2},
+    "whisper-tiny":           {"microbatches": 1},
+}
+
+
+def _mesh_name(multi_pod: bool) -> str:
+    return "multipod_2x16x16" if multi_pod else "pod_16x16"
+
+
+def _replicated(tree, mesh):
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def _quantizer(cfg: ModelConfig):
+    from repro.serve.engine import _keep_dense
+    return lambda p: quantize_tree(p, _keep_dense)
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+def lower_train_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                     overrides: Optional[Dict[str, Any]] = None):
+    ov = dict(TRAIN_OVERRIDES.get(cfg.name, {}))
+    ov.update(overrides or {})
+    micro = int(ov.get("microbatches", 1))
+    opt_cfg = OptimizerConfig(state_dtype=ov.get("state_dtype", "float32"))
+    accum = {"bfloat16": jnp.bfloat16,
+             "float32": jnp.float32}[ov.get("grad_accum_dtype", "float32")]
+
+    state_struct = jax.eval_shape(
+        lambda key: init_train_state(key, cfg, opt_cfg,
+                                     max_positions=shape.seq_len),
+        jax.random.PRNGKey(0))
+    batch_struct = specs_lib.batch_specs_struct(cfg, shape)
+
+    state_specs = shard_rules.train_state_specs(state_struct, mesh)
+    batch_specs = shard_rules.batch_specs(batch_struct, mesh)
+    mb_constraint = None
+    if micro > 1:
+        mb_constraint = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, P(None, *s)), batch_specs,
+            is_leaf=lambda x: isinstance(x, P))
+
+    step = make_train_step(cfg, opt_cfg, microbatches=micro,
+                           grad_accum_dtype=accum,
+                           batch_sharding_constraint=mb_constraint)
+
+    metrics_struct = jax.eval_shape(step, state_struct, batch_struct)[1]
+    jitted = jax.jit(
+        step,
+        in_shardings=(shard_rules.named(mesh, state_specs),
+                      shard_rules.named(mesh, batch_specs)),
+        out_shardings=(shard_rules.named(mesh, state_specs),
+                       _replicated(metrics_struct, mesh)),
+        donate_argnums=(0,),
+    )
+    with mesh, shard_ctx.activation_sharding(mesh):
+        return jitted.lower(state_struct, batch_struct), {"microbatches": micro,
+                                                          **ov}
+
+
+def lower_prefill_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                       quant: str = "none"):
+    qz = _quantizer(cfg) if quant == "q8_0" else None
+    params_struct = specs_lib.abstract_params(cfg, shape, quantize=qz)
+    batch_struct = specs_lib.batch_specs_struct(cfg, shape)
+    p_specs = shard_rules.param_specs(params_struct, mesh)
+    b_specs = shard_rules.batch_specs(batch_struct, mesh)
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    logits_spec = P(baxes if len(baxes) > 1 else baxes[0], None,
+                    "model" if cfg.vocab_size % mesh.shape["model"] == 0
+                    else None)
+
+    def fwd(params, batch):
+        logits, _ = model_lib.forward(params, cfg, batch)
+        return logits
+
+    jitted = jax.jit(
+        fwd,
+        in_shardings=(shard_rules.named(mesh, p_specs),
+                      shard_rules.named(mesh, b_specs)),
+        out_shardings=NamedSharding(mesh, logits_spec),
+    )
+    with mesh, shard_ctx.activation_sharding(mesh):
+        return jitted.lower(params_struct, batch_struct), {"quant": quant}
+
+
+def lower_decode_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+                      quant: str = "none"):
+    qz = _quantizer(cfg) if quant == "q8_0" else None
+    params_struct = specs_lib.abstract_params(cfg, shape, quantize=qz)
+    state_struct = specs_lib.abstract_serve_state(cfg, shape, params_struct)
+    token_struct = specs_lib.token_struct(shape)
+
+    p_specs = shard_rules.param_specs(params_struct, mesh)
+    s_specs = shard_rules.cache_specs(state_struct, mesh,
+                                      cfg.num_kv_heads, cfg.head_dim)
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bsize = 1
+    for a in baxes:
+        bsize *= mesh.shape[a]
+    tok_spec = P(baxes if len(baxes) > 1 else baxes[0]) \
+        if shape.global_batch % bsize == 0 and bsize > 1 else P()
+    logits_spec = P(tok_spec[0] if len(tok_spec) else None, None,
+                    "model" if cfg.vocab_size % mesh.shape["model"] == 0
+                    else None)
+
+    def step(params, token, state):
+        return model_lib.serve_step(params, cfg, token, state)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(shard_rules.named(mesh, p_specs),
+                      NamedSharding(mesh, tok_spec),
+                      shard_rules.named(mesh, s_specs)),
+        out_shardings=(NamedSharding(mesh, logits_spec),
+                       shard_rules.named(mesh, s_specs)),
+        donate_argnums=(2,),
+    )
+    with mesh, shard_ctx.activation_sharding(mesh):
+        return jitted.lower(params_struct, token_struct, state_struct), \
+            {"quant": quant}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               quant: str = "none",
+               overrides: Optional[Dict[str, Any]] = None,
+               cfg_overrides: Optional[Dict[str, Any]] = None):
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if shape.kind == "train":
+        return lower_train_cell(cfg, shape, mesh, overrides=overrides), mesh
+    if shape.kind == "prefill":
+        return lower_prefill_cell(cfg, shape, mesh, quant=quant), mesh
+    return lower_decode_cell(cfg, shape, mesh, quant=quant), mesh
+
+
+# ---------------------------------------------------------------------------
+# Cell execution: lower -> compile -> analyze -> JSON
+# ---------------------------------------------------------------------------
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             quant: str = "none", out_dir: str = OUT_DIR,
+             variant: str = "", verbose: bool = True,
+             overrides: Optional[Dict[str, Any]] = None,
+             cfg_overrides: Optional[Dict[str, Any]] = None) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh_name = _mesh_name(multi_pod)
+    ok, reason = shape_applicable(cfg, shape)
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "quant": quant, "variant": variant, "status": "skip",
+        "reason": reason,
+    }
+    tag = f"{arch}__{shape_name}" + (f"__{variant}" if variant else "")
+    path = os.path.join(out_dir, mesh_name, tag + ".json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+
+    if ok:
+        try:
+            t0 = time.time()
+            (lowered, meta), mesh = lower_cell(
+                arch, shape_name, multi_pod=multi_pod, quant=quant,
+                overrides=overrides, cfg_overrides=cfg_overrides)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+            ma = compiled.memory_analysis()
+            chips = mesh.devices.size
+            report = analyze_compiled(
+                compiled, arch=arch, shape_cfg=shape, cfg=cfg,
+                mesh_name=mesh_name, chips=chips)
+            result.update(
+                status="ok", meta=meta,
+                lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+                memory={
+                    "argument_bytes": ma.argument_size_in_bytes,
+                    "temp_bytes": ma.temp_size_in_bytes,
+                    "output_bytes": ma.output_size_in_bytes,
+                    "alias_bytes": ma.alias_size_in_bytes,
+                    "peak_estimate_bytes": (ma.argument_size_in_bytes
+                                            + ma.temp_size_in_bytes
+                                            + ma.output_size_in_bytes
+                                            - ma.alias_size_in_bytes),
+                },
+                roofline=report.to_dict(),
+            )
+        except Exception as e:  # lowering/compile failure = a bug to fix
+            result.update(status="error", error=f"{type(e).__name__}: {e}",
+                          traceback=traceback.format_exc()[-4000:])
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1, default=str)
+    if verbose:
+        _print_cell(result)
+    return result
+
+
+def _fmt_bytes(b) -> str:
+    return f"{b / 2**30:.2f}GiB" if b > 2**28 else f"{b / 2**20:.1f}MiB"
+
+
+def _print_cell(r: dict):
+    tag = f"{r['arch']}x{r['shape']}[{r['mesh']}]" + \
+        (f"({r['variant']})" if r.get("variant") else "")
+    if r["status"] == "skip":
+        print(f"SKIP {tag}: {r['reason']}")
+    elif r["status"] == "error":
+        print(f"FAIL {tag}: {r['error']}")
+    else:
+        m, rf = r["memory"], r["roofline"]
+        print(f"OK   {tag} compile={r['compile_s']:.0f}s "
+              f"mem(arg={_fmt_bytes(m['argument_bytes'])} "
+              f"temp={_fmt_bytes(m['temp_bytes'])}) "
+              f"terms(c={rf['compute_s']:.4f}s m={rf['memory_s']:.4f}s "
+              f"coll={rf['collective_s']:.4f}s) "
+              f"bound={rf['bottleneck']} "
+              f"useful={rf['useful_flop_ratio']:.2f} "
+              f"roofline={rf['roofline_fraction']:.3f}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=sorted(ASSIGNED))
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in ALL_SHAPES])
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--quant", default="none", choices=["none", "q8_0"])
+    ap.add_argument("--variant", default="", help="tag for ablation outputs")
+    ap.add_argument("--attn-impl", default=None, choices=["chunked", "flash"])
+    ap.add_argument("--kv-quant", default=None, choices=["none", "q8"])
+    ap.add_argument("--remat", default=None, choices=["none", "full", "dots"])
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args(argv)
+
+    archs = sorted(ASSIGNED) if (args.all or not args.arch) else [args.arch]
+    shapes = ([s.name for s in ALL_SHAPES]
+              if (args.all or not args.shape) else [args.shape])
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    cfg_ov = {}
+    if args.attn_impl:
+        cfg_ov["attn_impl"] = args.attn_impl
+    if args.kv_quant:
+        cfg_ov["kv_quant"] = args.kv_quant
+    if args.remat:
+        cfg_ov["remat"] = args.remat
+    train_ov = ({"microbatches": args.microbatches}
+                if args.microbatches else None)
+
+    n_fail = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                r = run_cell(arch, shape, multi_pod=multi_pod,
+                             quant=args.quant, out_dir=args.out,
+                             variant=args.variant, overrides=train_ov,
+                             cfg_overrides=cfg_ov or None)
+                n_fail += r["status"] == "error"
+    print(f"done; {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,82 @@
+"""ShapeDtypeStruct stand-ins for every model input of every
+(architecture x input-shape) cell — weak-type-correct, shardable, no device
+allocation. The dry-run lowers against these.
+
+Semantics per the assignment brief + DESIGN.md §4:
+  train/prefill  — full-sequence batch (teacher-forced for whisper).
+  decode/long    — ONE new token against a KV cache of ``seq_len`` (the
+                   state structs come from ``abstract_serve_state``).
+  [audio]/[vlm]  — modality frontends are stubs: mel frames / patch
+                   embeddings arrive precomputed.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as model_lib
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs_struct(cfg: ModelConfig, shape: ShapeConfig
+                       ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Full-sequence batch structs (train / prefill kinds)."""
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": SDS((b, s), jnp.int32),
+        "labels": SDS((b, s), jnp.int32),
+    }
+    if cfg.family == "audio":
+        out["mel"] = SDS((b, s, cfg.n_mels), jnp.float32)
+    if cfg.family == "vlm" and cfg.vision_patches:
+        p = min(cfg.vision_patches, s // 2)
+        out["patches"] = SDS((b, p, cfg.vision_embed_dim), jnp.float32)
+    return out
+
+
+def token_struct(shape: ShapeConfig) -> jax.ShapeDtypeStruct:
+    return SDS((shape.global_batch, 1), jnp.int32)
+
+
+def abstract_params(cfg: ModelConfig, shape: ShapeConfig, *,
+                    quantize=None):
+    """Abstract param pytree (eval_shape — nothing allocated)."""
+    def build(key):
+        p = model_lib.init_params(key, cfg, max_positions=shape.seq_len)
+        if quantize is not None:
+            p = quantize(p)
+        return p
+    return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def abstract_serve_state(cfg: ModelConfig, shape: ShapeConfig, params_struct):
+    """Abstract decode state with a cache of length seq_len (the decode_*
+    cells' premise: the cache is already full; we lower one new token)."""
+    b, s = shape.global_batch, shape.seq_len
+
+    def build(params):
+        memory = None
+        if cfg.family == "audio":
+            dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+            memory = jnp.zeros((b, cfg.encoder_ctx, cfg.d_model), dt)
+        return model_lib.init_serve_state(params, cfg, b, s, memory=memory,
+                                          prefill_len=s - 1)
+
+    return jax.eval_shape(build, params_struct)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                quantize=None) -> Dict[str, Any]:
+    """Everything the dry-run needs for one cell, keyed by role."""
+    out: Dict[str, Any] = {"params": abstract_params(cfg, shape,
+                                                     quantize=quantize)}
+    if shape.is_decode:
+        out["token"] = token_struct(shape)
+        out["state"] = abstract_serve_state(cfg, shape, out["params"])
+    else:
+        out["batch"] = batch_specs_struct(cfg, shape)
+    return out

@@ -1,0 +1,35 @@
+"""Production mesh definitions.
+
+A FUNCTION, not a module constant — importing this module never touches jax
+device state, so tests/benches keep their 1-CPU view and only dryrun.py
+(which sets XLA_FLAGS first) ever builds the 256/512-device meshes.
+
+Mesh shapes (assignment):
+  single-pod : (16, 16)    axes ("data", "model")   = 256 chips (one v5e pod)
+  multi-pod  : (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_smoke_mesh(devices=None):
+    """Smallest nontrivial mesh for CPU tests (requires >=4 host devices,
+    set via XLA_FLAGS in the test process)."""
+    n = len(devices or jax.devices())
+    if n >= 8:
+        shape, axes = (2, 4), ("data", "model")
+    elif n >= 4:
+        shape, axes = (2, 2), ("data", "model")
+    else:
+        shape, axes = (1, 1), ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,66 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Boots the ServeEngine with the paper's Q8_0 offload path and runs a batch
+of synthetic requests, reporting latency + PDP/EDP per request (the
+paper's Table 5 / Fig 9 quantities under the TDP-normalized power model).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ALL_ARCHS, get_config, get_smoke_config
+from repro.core import energy
+from repro.core.offload import OffloadEngine
+from repro.models import model as model_lib
+from repro.serve.engine import ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ALL_ARCHS))
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--quant", default="q8_0", choices=["none", "q8_0"])
+    ap.add_argument("--offload", action="store_true",
+                    help="route GEMMs through the offload dispatcher")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    params = model_lib.init_params(jax.random.PRNGKey(args.seed), cfg,
+                                   max_positions=512)
+    offload = OffloadEngine(interpret=True, prefer_pallas=False) \
+        if args.offload else None
+    engine = ServeEngine(cfg, params, max_len=args.max_new + 32,
+                         quant=args.quant, offload=offload)
+
+    rng = np.random.default_rng(args.seed)
+    if cfg.family == "audio":
+        mel = rng.standard_normal(
+            (args.requests, 64, cfg.n_mels)).astype(np.float32)
+        results = engine.transcribe(mel, max_new=args.max_new)
+    else:
+        prompts = rng.integers(
+            0, cfg.vocab_size, (args.requests, 8)).astype(np.int32)
+        results = engine.generate(prompts, max_new=args.max_new)
+
+    for i, r in enumerate(results):
+        print(f"req{i}: {r.steps} tokens in {r.total_s:.3f}s "
+              f"(prefill {r.prefill_s:.3f}s) pdp={r.pdp_j():.1f}J "
+              f"tokens={r.tokens[:8]}...")
+    rep = engine.energy_report(results)
+    print("batch:", {k: round(v, 4) if isinstance(v, float) else v
+                     for k, v in rep.items()})
+    if offload is not None:
+        print(f"offload: {offload.stats.offloaded_calls} offloaded / "
+              f"{offload.stats.fallback_calls} fallback "
+              f"(rate {offload.stats.offload_rate():.2%})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

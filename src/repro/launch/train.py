@@ -1,0 +1,70 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the supervised training loop (Trainer) on whatever devices exist:
+CPU smoke (reduced config) by default; ``--full`` uses the full config
+(dry-run-scale — only sensible on a real pod). The supervision loop
+restarts from the latest atomic checkpoint on retryable failures — the
+single-node stand-in for the pod controller's restart policy.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import OptimizerConfig, RunConfig, ShapeConfig
+from repro.configs.registry import ALL_ARCHS, get_config, get_smoke_config
+from repro.launch.mesh import make_smoke_mesh
+from repro.sharding import ctx as shard_ctx
+from repro.train.fault import RestartPolicy, run_with_restarts
+from repro.train.trainer import Trainer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ALL_ARCHS))
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (needs real accelerators)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard over available host devices")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--grad-compress", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--max-restarts", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    run = RunConfig(
+        model=cfg, shape=shape,
+        optimizer=OptimizerConfig(lr=args.lr, warmup_steps=5,
+                                  total_steps=max(args.steps, 10),
+                                  grad_compress=args.grad_compress),
+        steps=args.steps, checkpoint_every=args.ckpt_every,
+        checkpoint_dir=args.ckpt_dir, max_restarts=args.max_restarts)
+
+    mesh = make_smoke_mesh() if args.mesh else None
+
+    def make_attempt(attempt: int):
+        def attempt_fn():
+            trainer = Trainer(run, mesh=mesh, install_signal_handler=True,
+                              vocab_cap=512)
+            if mesh is not None:
+                with shard_ctx.activation_sharding(mesh):
+                    return trainer.train()
+            return trainer.train()
+        return attempt_fn
+
+    metrics = run_with_restarts(
+        make_attempt, RestartPolicy(max_restarts=args.max_restarts))
+    print("final:", {k: round(v, 4) for k, v in metrics.items()})
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,396 @@
+"""GQA attention: query-chunked (flash-style) causal attention for train and
+prefill, plus single-step KV-cache decode.
+
+The query-chunked online-softmax scan keeps the score matrix at
+(B, H, chunk, S) instead of (B, H, S, S) — without it, prefill_32k would
+materialize multi-GB score tensors per device. On real TPUs the same
+structure is what a Pallas flash kernel pipelines through VMEM; expressing it
+as a lax.scan lets XLA fuse it and keeps the dry-run honest about memory.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.sharding import ctx
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.bfloat16,
+                   cross: bool = False) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "q": layers.init_linear(ks[0], d, hq * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "k": layers.init_linear(ks[1], d, hkv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "v": layers.init_linear(ks[2], d, hkv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "o": layers.init_linear(ks[3], hq * hd, d, dtype=dtype),
+    }
+
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1)
+
+
+def _repeat_kv_heads(kv: jax.Array, hq: int) -> jax.Array:
+    """(B, S, Hkv, D) -> (B, S, Hq, D). With Hq constrained onto the model
+    axis each device materializes only its local Hq/|model| head slice, so
+    the repeat is cheap; the flat-head layout is what lets the big attention
+    tensors shard 16-way on heads (Hkv=8 alone cannot)."""
+    hkv = kv.shape[2]
+    if hkv == hq:
+        return kv
+    kv = jnp.repeat(kv, hq // hkv, axis=2)
+    return ctx.constrain(kv, "batch", None, "model", None)
+
+
+def _chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                       causal: bool, chunk: int,
+                       q_offset: int = 0) -> jax.Array:
+    """Query-chunked attention, flat heads, per-chunk remat.
+
+    q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D). Returns (B, Sq, Hq, D).
+    Each chunk body is jax.checkpoint'ed so the scan over chunks never
+    stacks (chunk x Sk) f32 logits as autodiff residuals — without this the
+    whisper train_4k dry-run kept 48 GiB logit buffers alive. The PV matmul
+    runs in bf16 with f32 accumulation (MXU-native, flash-standard).
+    """
+    b, sq, hq, d = q.shape
+    sk = k.shape[1]
+    scale = d ** -0.5
+    chunk = min(chunk, sq)
+    if sq % chunk:
+        chunk = sq  # fall back to single chunk for ragged smoke shapes
+    n_chunks = sq // chunk
+
+    k = _repeat_kv_heads(k, hq)
+    v = _repeat_kv_heads(v, hq)
+    qc = q.reshape(b, n_chunks, chunk, hq, d).transpose(1, 0, 3, 2, 4)
+    kpos = jnp.arange(sk)
+
+    @jax.checkpoint
+    def one_chunk(ci, qi):
+        # qi: (B, Hq, chunk, D)
+        logits = jnp.einsum("bhqd,bshd->bhqs", qi, k,
+                            preferred_element_type=jnp.float32) * scale
+        logits = ctx.constrain(logits, "batch", "model", None, None)
+        if causal:
+            qpos = q_offset + ci * chunk + jnp.arange(chunk)
+            mask = kpos[None, :] <= qpos[:, None]
+            logits = jnp.where(mask[None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqs,bshd->bhqd", probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.astype(q.dtype)
+
+    if n_chunks == 1:
+        out = one_chunk(0, qc[0])[None]
+    else:
+        out = jax.lax.map(lambda args: one_chunk(*args),
+                          (jnp.arange(n_chunks), qc))
+    # (nc, B, Hq, chunk, D) -> (B, Sq, Hq, D)
+    return out.transpose(1, 0, 3, 2, 4).reshape(b, sq, hq, d)
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_core(q, k, v, causal, k_chunk, scale, q_offset):
+    out, _ = _flash_fwd_impl(q, k, v, causal, k_chunk, scale, q_offset)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, k_chunk, scale, q_offset):
+    """q: (B,H,Sq,D); k/v: (B,H,Sk,D). Online-softmax forward scan over
+    k-blocks; returns (out, logsumexp) — the flash-2 forward."""
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    n_k = sk // k_chunk
+    kb = k.reshape(b, h, n_k, k_chunk, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, h, n_k, k_chunk, d).transpose(2, 0, 1, 3, 4)
+    qpos = q_offset + jnp.arange(sq)
+
+    # layout intent: heads on the model axis when they divide; otherwise
+    # SEQUENCE parallelism on Sq (context parallel) — without this pin,
+    # GSPMD shards the contraction dim D and all-reduces every (Sq, Ck)
+    # logits tile (measured 960 GiB/step on qwen2.5's 40 heads, §Perf A3).
+    mesh = ctx.current_mesh()
+    msize = mesh.shape.get("model", 1) if mesh is not None else 1
+    heads_ok = msize > 1 and q.shape[1] % msize == 0
+    h_tok = "model" if heads_ok else "model_force"
+    s_tok = None
+    q = ctx.constrain(q, "batch", h_tok, s_tok, None)
+
+    def kv_block(carry, inputs):
+        m, l, acc = carry
+        kj, vj, kstart = inputs
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, kj,
+                       preferred_element_type=jnp.float32) * scale
+        s = ctx.constrain(s, "batch", h_tok, s_tok, None)
+        if causal:
+            kpos = kstart + jnp.arange(k_chunk)
+            s = jnp.where((kpos[None, :] <= qpos[:, None])[None, None],
+                          s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(v.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, h, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, h, sq), jnp.float32),
+            jnp.zeros((b, h, sq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(kv_block, init,
+                                  (kb, vb, jnp.arange(n_k) * k_chunk))
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, k_chunk, scale, q_offset):
+    out, lse = _flash_fwd_impl(q, k, v, causal, k_chunk, scale, q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, k_chunk, scale, q_offset, res, dout):
+    """Flash-2 backward: recompute p per k-block from (q, k, lse) — no
+    stacked probs residuals (naive autodiff of the fwd scan stores a
+    (n_k, B, H, Sq, k_chunk) probs stack, which measured WORSE than the
+    chunked baseline; see EXPERIMENTS.md §Perf A2)."""
+    q, k, v, out, lse = res
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    n_k = sk // k_chunk
+    kb = k.reshape(b, h, n_k, k_chunk, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, h, n_k, k_chunk, d).transpose(2, 0, 1, 3, 4)
+    qpos = q_offset + jnp.arange(sq)
+    dout_f = dout.astype(jnp.float32)
+    # delta_i = rowsum(dout_i * out_i)  (flash-2 trick)
+    delta = jnp.sum(dout_f * out.astype(jnp.float32), axis=-1)
+
+    mesh = ctx.current_mesh()
+    msize = mesh.shape.get("model", 1) if mesh is not None else 1
+    heads_ok = msize > 1 and q.shape[1] % msize == 0
+    h_tok = "model" if heads_ok else "model_force"
+    s_tok = None
+
+    def kv_block(dq, inputs):
+        kj, vj, kstart = inputs
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, kj,
+                       preferred_element_type=jnp.float32) * scale
+        s = ctx.constrain(s, "batch", h_tok, s_tok, None)
+        if causal:
+            kpos = kstart + jnp.arange(k_chunk)
+            s = jnp.where((kpos[None, :] <= qpos[:, None])[None, None],
+                          s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                       # (B,H,Sq,Ck)
+        dv_j = jnp.einsum("bhqk,bhqd->bhkd", p.astype(dout.dtype), dout_f)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", dout_f,
+                        vj.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bhqk,bhkd->bhqd", ds,
+                             kj.astype(jnp.float32))
+        dk_j = jnp.einsum("bhqk,bhqd->bhkd", ds, q.astype(jnp.float32))
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(kv_block, dq0,
+                                    (kb, vb, jnp.arange(n_k) * k_chunk))
+    dk = dk_b.transpose(1, 2, 0, 3, 4).reshape(b, h, sk, d)
+    dv = dv_b.transpose(1, 2, 0, 3, 4).reshape(b, h, sk, d)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_core.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     causal: bool, chunk: int, k_chunk: int = 1024,
+                     q_offset: int = 0) -> jax.Array:
+    """Online-softmax (flash-2) attention — beyond-paper optimization of
+    the memory roofline term (EXPERIMENTS.md §Perf).
+
+    The chunked baseline materializes (Sq, Sk) f32 logits and makes ~5
+    probs-sized HBM round trips (mask, softmax, PV, and their backward);
+    at S>=4k those dominate the train-cell memory term. Here only
+    (Sq, k_chunk) tiles ever exist; the custom VJP recomputes them per
+    block in the backward (true flash-2 — naive autodiff of the forward
+    scan would stack per-block probs residuals and measured WORSE than
+    the baseline). ``chunk`` is accepted for API parity; the q dimension
+    is processed whole since tiles are already k-blocked.
+    """
+    b, sq, hq, d = q.shape
+    sk = k.shape[1]
+    k_chunk = min(k_chunk, sk)
+    if sk % k_chunk:
+        k_chunk = sk
+    k = _repeat_kv_heads(k, hq)
+    v = _repeat_kv_heads(v, hq)
+    qt = q.transpose(0, 2, 1, 3)           # (B,H,Sq,D)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = _flash_core(qt, kt, vt, causal, k_chunk, d ** -0.5, q_offset)
+    return out.transpose(0, 2, 1, 3)
+
+
+def attention(p: dict, cfg: ModelConfig, x: jax.Array, *,
+              positions: Optional[jax.Array] = None,
+              memory: Optional[jax.Array] = None,
+              causal: bool = True,
+              chunk: int = 2048,
+              engine=None) -> jax.Array:
+    """Self- or cross-attention over a full sequence (train / prefill).
+
+    memory: encoder states for cross-attention (disables causal + rope).
+    """
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    src = x if memory is None else memory
+    q = _split_heads(layers.linear(p["q"], x, engine, "attn.q"), hq)
+    k = _split_heads(layers.linear(p["k"], src, engine, "attn.k"), hkv)
+    v = _split_heads(layers.linear(p["v"], src, engine, "attn.v"), hkv)
+    q = ctx.constrain(q, "batch", None, "model", None)
+    k = ctx.constrain(k, "batch", None, "model", None)
+    v = ctx.constrain(v, "batch", None, "model", None)
+    if memory is None and cfg.pos_embedding == "rope":
+        if positions is None:
+            positions = jnp.arange(s)[None, :]
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    impl = (_flash_attention if cfg.attn_impl == "flash"
+            else _chunked_attention)
+    out = impl(q, k, v, causal=(memory is None and causal), chunk=chunk)
+    return layers.linear(p["o"], out.reshape(b, s, hq * hd), engine, "attn.o")
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_max, Hkv, D)
+    v: jax.Array          # (B, S_max, Hkv, D)
+    length: jax.Array     # scalar int32 — tokens currently valid
+
+    @classmethod
+    def zeros(cls, b: int, s_max: int, hkv: int, hd: int, dtype=jnp.bfloat16):
+        return cls(jnp.zeros((b, s_max, hkv, hd), dtype),
+                   jnp.zeros((b, s_max, hkv, hd), dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+class QKVCache(NamedTuple):
+    """Int8-quantized KV cache — the paper's Q8_0 block idea applied to the
+    *decode-dominant* bytes (beyond-paper, EXPERIMENTS.md §Perf C). One
+    scale per (position, head) over the head_dim block; K/V stream as int8
+    + f32 scales (~2.06 B/elt pair -> 1.03) and dequantize inline right
+    before the attention MACs, exactly like IMAX's ALU3 inline dequant."""
+    k_qs: jax.Array       # int8 (B, S_max, Hkv, D)
+    v_qs: jax.Array       # int8 (B, S_max, Hkv, D)
+    k_scale: jax.Array    # f32  (B, S_max, Hkv)
+    v_scale: jax.Array    # f32  (B, S_max, Hkv)
+    length: jax.Array
+
+    @classmethod
+    def zeros(cls, b: int, s_max: int, hkv: int, hd: int, dtype=None):
+        return cls(jnp.zeros((b, s_max, hkv, hd), jnp.int8),
+                   jnp.zeros((b, s_max, hkv, hd), jnp.int8),
+                   jnp.zeros((b, s_max, hkv), jnp.float32),
+                   jnp.zeros((b, s_max, hkv), jnp.float32),
+                   jnp.zeros((), jnp.int32))
+
+
+def quantize_kv(x: jax.Array):
+    """(B, S, H, D) -> (int8 qs, f32 scale (B,S,H)); symmetric per-head."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = amax / 127.0
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    q = xf * inv[..., None]
+    q = jnp.clip(jnp.round(q), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(qs: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
+    return (qs.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array,
+                     cache: KVCache, *,
+                     memory_kv: Optional[tuple] = None,
+                     engine=None):
+    """One decode step. x: (B, 1, d). Returns (out, new_cache).
+
+    memory_kv: precomputed (k, v) encoder projections for cross-attention
+    (whisper's dec.cross.kv — computed once per utterance, paper §3 Fig 1).
+    """
+    b = x.shape[0]
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _split_heads(layers.linear(p["q"], x, engine, "dec.attn.q"), hq)
+
+    if memory_kv is None:
+        knew = _split_heads(layers.linear(p["k"], x, engine, "dec.attn.k"), hkv)
+        vnew = _split_heads(layers.linear(p["v"], x, engine, "dec.attn.v"), hkv)
+        if cfg.pos_embedding == "rope":
+            pos = cache.length[None, None]
+            q = layers.apply_rope(q, pos, cfg.rope_theta)
+            knew = layers.apply_rope(knew, pos, cfg.rope_theta)
+        if isinstance(cache, QKVCache):
+            # int8 cache path: quantize the new entry, stream int8 +
+            # scales, dequantize inline before the MACs (paper-style)
+            kq, ks = quantize_kv(knew)
+            vq, vs = quantize_kv(vnew)
+            upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
+                buf, val.astype(buf.dtype), cache.length, axis=1)
+            new_cache = QKVCache(upd(cache.k_qs, kq), upd(cache.v_qs, vq),
+                                 upd(cache.k_scale, ks),
+                                 upd(cache.v_scale, vs), cache.length + 1)
+            k = dequantize_kv(new_cache.k_qs, new_cache.k_scale, x.dtype)
+            v = dequantize_kv(new_cache.v_qs, new_cache.v_scale, x.dtype)
+        else:
+            k = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, knew.astype(cache.k.dtype), cache.length, axis=1)
+            v = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, vnew.astype(cache.v.dtype), cache.length, axis=1)
+            new_cache = KVCache(k, v, cache.length + 1)
+        valid = jnp.arange(k.shape[1]) <= cache.length
+    else:
+        k, v = memory_kv
+        new_cache = cache
+        valid = None
+
+    # Grouped decode contraction (repeated KV never materialized — at 32k
+    # cache scale a 64-head repeat would move 8x the cache bytes per step).
+    # Constraint placement mirrors sharding/rules.cache_specs: the model
+    # axis lands on Hkv when it divides, otherwise on S — the S case is
+    # flash-decode-style sequence parallelism where each model shard
+    # contracts its cache slice and GSPMD inserts the tiny softmax/out
+    # all-reduces.
+    mesh = ctx.current_mesh()
+    msize = mesh.shape.get("model", 1) if mesh is not None else 1
+    kv_sharded = msize > 1 and hkv % msize == 0
+    batch_ok = mesh is not None and b % ctx.batch_shard_size(mesh) == 0
+    s_tok = None if kv_sharded else ("model" if batch_ok else "seq")
+    g = hq // hkv
+    qg = q.reshape(b, 1, hkv, g, hd)
+    logits = jnp.einsum("bqhgd,bshd->bhgqs", qg, k,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    logits = ctx.constrain(logits, "batch", "model" if kv_sharded else None,
+                           None, None, s_tok)
+    if valid is not None:
+        logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out.astype(x.dtype).reshape(b, 1, hq * hd)
+    return layers.linear(p["o"], out, engine, "dec.attn.o"), new_cache

@@ -1,0 +1,231 @@
+"""Family dispatch: one public API over every assigned architecture.
+
+  init_params(key, cfg, max_positions)        -> param pytree
+  forward(params, cfg, batch)                 -> (logits, aux)   train/prefill
+  loss_fn(params, cfg, batch)                 -> (loss, metrics)
+  init_serve_state(params, cfg, batch, max_len) -> decode state pytree
+  serve_step(params, cfg, token, state)       -> (logits, state')  one token
+
+Batch dict conventions (mirrored by launch/input_specs.py):
+  LM families : {"tokens": (B,S) i32, "labels": (B,S) i32}
+  vlm         : + {"patches": (B,P,E_vis) f32}  — precomputed anyres tiles,
+                projected and spliced over the first P token positions
+  audio       : {"mel": (B,F,n_mels) f32, "tokens": (B,T), "labels": (B,T)}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, transformer, whisper
+from repro.sharding import ctx
+
+
+class ServeState(NamedTuple):
+    """Decode-state wrapper uniform across families."""
+    layer_states: Any     # list per pattern position (LM) | WhisperDecodeState
+    step: jax.Array       # scalar i32 — absolute position of the next token
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ModelConfig, max_positions: int = 0) -> dict:
+    if cfg.family == "audio":
+        return whisper.init_whisper(key, cfg, max_positions)
+    pdtype = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+    ks = jax.random.split(key, 4)
+    params = {
+        "embed": layers.init_embedding(ks[0], cfg.padded_vocab, cfg.d_model,
+                                       pdtype),
+        "stack": transformer.init_decoder_stack(ks[1], cfg),
+        "final_norm": layers.init_norm(cfg.d_model, cfg.norm, pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.init_linear(ks[2], cfg.d_model,
+                                               cfg.padded_vocab, dtype=pdtype)
+    if cfg.family == "vlm":
+        params["projector"] = layers.init_linear(
+            ks[3], cfg.vision_embed_dim, cfg.d_model, bias=True, dtype=pdtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding / readout shared by LM families
+# ---------------------------------------------------------------------------
+def _embed_inputs(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
+                  engine=None) -> jax.Array:
+    x = layers.embed(params["embed"], batch["tokens"]).astype(_dtype(cfg))
+    if cfg.family == "vlm" and "patches" in batch:
+        proj = layers.linear(params["projector"], batch["patches"],
+                             engine, "vlm.projector").astype(x.dtype)
+        p = proj.shape[1]
+        # splice: precomputed patch embeddings occupy the first P positions
+        x = jnp.concatenate([proj, x[:, p:]], axis=1)
+    return ctx.constrain(x, "batch", None, None)
+
+
+def _readout(params: dict, cfg: ModelConfig, x: jax.Array,
+             engine=None) -> jax.Array:
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        return layers.unembed(params["embed"], x, engine)
+    return layers.linear(params["lm_head"], x, engine, "lm_head")
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+def hidden_forward(params: dict, cfg: ModelConfig,
+                   batch: Dict[str, jax.Array], *,
+                   engine=None, attn_chunk: int = 2048
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Backbone only: (final hidden states pre-readout, moe_aux_loss)."""
+    if cfg.family == "audio":
+        memory = whisper.encode(params, cfg, batch["mel"], engine=engine,
+                                attn_chunk=attn_chunk)
+        h = whisper.decode_train(params, cfg, batch["tokens"], memory,
+                                 engine=engine, attn_chunk=attn_chunk,
+                                 return_hidden=True)
+        return h, jnp.zeros((), jnp.float32)
+    x = _embed_inputs(params, cfg, batch, engine)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, aux = transformer.apply_decoder_stack(params["stack"], cfg, x,
+                                             positions=positions,
+                                             engine=engine,
+                                             attn_chunk=attn_chunk)
+    return x, aux
+
+
+def forward(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            engine=None, attn_chunk: int = 2048
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits, moe_aux_loss)."""
+    h, aux = hidden_forward(params, cfg, batch, engine=engine,
+                            attn_chunk=attn_chunk)
+    if cfg.family == "audio":
+        return whisper_readout(params, cfg, h, engine), aux
+    return _readout(params, cfg, h, engine), aux
+
+
+def whisper_readout(params: dict, cfg: ModelConfig, x: jax.Array,
+                    engine=None) -> jax.Array:
+    x = layers.norm_apply(params["dec_norm"], x, cfg.norm)
+    return layers.unembed(params["embed"], x, engine)
+
+
+def _ce_of_logits(logits: jax.Array, labels: jax.Array,
+                  vocab_size: int) -> Tuple[jax.Array, jax.Array]:
+    """Masked CE sums for one chunk. Pad columns (>= vocab_size) excluded."""
+    logits = logits.astype(jnp.float32)
+    v = logits.shape[-1]
+    if v > vocab_size:  # Megatron-style vocab pad: mask pad columns
+        col = jax.lax.broadcasted_iota(jnp.int32, (v,), 0)
+        logits = jnp.where(col < vocab_size, logits, -1e30)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            engine=None, attn_chunk: int = 2048, ce_chunk: int = 512
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token CE (labels already shifted by the data pipeline);
+    label -1 positions are masked.
+
+    The readout + CE is *sequence-chunked* under jax.checkpoint: full
+    (B, S, V) f32 logits are never materialized — at qwen/whisper scale
+    (V=152k/52k, B*S=1M tokens) the monolithic logits tensor alone would be
+    hundreds of GiB per pod. Chunking costs one extra readout GEMM in the
+    backward pass per chunk (remat) and bounds the logits temp at
+    (B, ce_chunk, V).
+    """
+    h, aux = hidden_forward(params, cfg, batch, engine=engine,
+                            attn_chunk=attn_chunk)
+    labels = batch["labels"]
+    readout = (whisper_readout if cfg.family == "audio" else _readout)
+
+    b, s, d = h.shape
+    n_chunks = s // ce_chunk if (s % ce_chunk == 0 and s > ce_chunk) else 1
+    if n_chunks == 1:
+        logits = readout(params, cfg, h, engine)
+        ce_sum, ntok = _ce_of_logits(logits, labels, cfg.vocab_size)
+    else:
+        hc = jnp.moveaxis(h.reshape(b, n_chunks, ce_chunk, d), 1, 0)
+        lc = jnp.moveaxis(labels.reshape(b, n_chunks, ce_chunk), 1, 0)
+
+        @jax.checkpoint
+        def chunk_ce(h_i, l_i):
+            logits = readout(params, cfg, h_i, engine)
+            logits = ctx.constrain(logits, "batch", None, "model")
+            return _ce_of_logits(logits, l_i, cfg.vocab_size)
+
+        def body(carry, xs):
+            cs, nt = chunk_ce(*xs)
+            return (carry[0] + cs, carry[1] + nt), None
+
+        (ce_sum, ntok), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (hc, lc))
+    ntok = jnp.maximum(ntok, 1.0)
+    loss = ce_sum / ntok
+    total = loss + aux
+    return total, {"ce": loss, "moe_aux": aux, "ntok": ntok}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+def init_serve_state(params: dict, cfg: ModelConfig, batch: int, max_len: int,
+                     *, memory: Optional[jax.Array] = None, engine=None,
+                     prefill_len: int = 0) -> ServeState:
+    if cfg.family == "audio":
+        assert memory is not None, "whisper decode needs encoder memory"
+        st = whisper.init_whisper_decode_state(params, cfg, memory, max_len,
+                                               engine=engine, dtype=_dtype(cfg))
+    else:
+        st = transformer.init_decode_state(cfg, batch, max_len, _dtype(cfg))
+    return ServeState(layer_states=st, step=jnp.asarray(prefill_len, jnp.int32))
+
+
+def serve_step(params: dict, cfg: ModelConfig, token: jax.Array,
+               state: ServeState, *, engine=None
+               ) -> Tuple[jax.Array, ServeState]:
+    """token: (B, 1) i32 -> (logits (B, 1, V), state')."""
+    if cfg.family == "audio":
+        logits, st = whisper.decode_step(params, cfg, token,
+                                         state.layer_states, engine=engine)
+        return logits, ServeState(st, state.step + 1)
+    x = layers.embed(params["embed"], token).astype(_dtype(cfg))
+    x, st = transformer.decode_step_stack(params["stack"], cfg, x,
+                                          state.layer_states, engine=engine)
+    logits = _readout(params, cfg, x, engine)
+    return logits, ServeState(st, state.step + 1)
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            state: ServeState, *, engine=None, attn_chunk: int = 2048
+            ) -> Tuple[jax.Array, ServeState]:
+    """Sequence prefill that fills the decode caches, returning last-token
+    logits. Implemented as a scan of serve_step for state-carrying families
+    (correct, if not flash-fast; the prefill_32k dry-run cells lower
+    ``forward`` instead, which is the throughput path)."""
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+
+    def body(st, t):
+        tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+        logits, st = serve_step(params, cfg, tok, st, engine=engine)
+        return st, logits
+
+    state, logits = jax.lax.scan(body, state, jnp.arange(s))
+    return logits[-1], state

@@ -1,0 +1,252 @@
+"""Mamba2 / SSD (state-space duality) mixer — arXiv:2405.21060.
+
+Used by ``mamba2-780m`` (all layers) and ``jamba-v0.1-52b`` (7 of 8 layers,
+per DESIGN.md §6.5 we use the SSD recurrence for both with per-arch d_state).
+
+The blocked SSD algorithm is *matmul-dominated* (the C·Bᵀ and state einsums
+are dot-products over d_state / head_dim), so the paper's dot-product offload
+technique applies to most of its FLOPs; only the chunk-boundary recurrence is
+sequential. The in/out projections are ordinary offloadable GEMMs.
+
+Two execution paths share one parameterization:
+  * ``ssd_scan``        — chunked train/prefill over a full sequence
+  * ``ssm_decode_step`` — O(1) per-token recurrent update with carried state
+and a pure step-by-step reference ``ssd_reference`` used by tests to verify
+the chunked algorithm against the naive recurrence.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import layers
+from repro.sharding import ctx
+
+
+class SSMState(NamedTuple):
+    """Carried decode state for one SSD layer."""
+    conv: jax.Array   # (B, d_conv - 1, conv_dim) rolling input window
+    ssd: jax.Array    # (B, H, P, N) recurrent state
+    length: jax.Array  # scalar int32 — tokens absorbed so far
+
+    @classmethod
+    def zeros(cls, b: int, ssm: SSMConfig, d_model: int, dtype=jnp.float32):
+        di = ssm.d_inner(d_model)
+        nh = ssm.n_heads(d_model)
+        conv_dim = di + 2 * ssm.n_groups * ssm.d_state
+        return cls(
+            conv=jnp.zeros((b, ssm.d_conv - 1, conv_dim), dtype),
+            ssd=jnp.zeros((b, nh, ssm.head_dim, ssm.d_state), jnp.float32),
+            length=jnp.zeros((), jnp.int32),
+        )
+
+
+def init_ssm(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    ssm = cfg.ssm
+    d = cfg.d_model
+    di = ssm.d_inner(d)
+    nh = ssm.n_heads(d)
+    gN = ssm.n_groups * ssm.d_state
+    conv_dim = di + 2 * gN
+    ks = jax.random.split(key, 4)
+    # in_proj emits [z (di), x (di), B (gN), C (gN), dt (nh)]
+    return {
+        "in_proj": layers.init_linear(ks[0], d, 2 * di + 2 * gN + nh, dtype=dtype),
+        "out_proj": layers.init_linear(ks[1], di, d, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[2], (ssm.d_conv, conv_dim), jnp.float32)
+                   * (ssm.d_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        # A is a per-head scalar (Mamba2): A = -exp(A_log) in (-inf, 0)
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(            # softplus^-1 of U(1e-3, 1e-1)
+            jnp.linspace(1e-3, 1e-1, nh, dtype=jnp.float32))),
+        "norm": layers.init_norm(di, "rmsnorm", dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD scan (train / prefill)
+# ---------------------------------------------------------------------------
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular segment sums: out[..., i, j] = sum a[..., j+1:i+1].
+
+    a: (..., T). Returns (..., T, T) with -inf above the diagonal.
+    """
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array,
+             B: jax.Array, C: jax.Array, chunk: int,
+             initial_state: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD over a full sequence (Mamba2 Alg. 1, blocked-matmul form).
+
+    x:  (b, s, h, p)   per-head inputs (pre-multiplied by nothing; dt applied here)
+    dt: (b, s, h)      positive step sizes
+    A:  (h,)           negative per-head decay rates
+    B:  (b, s, g, n)   input projections (groups broadcast to heads)
+    C:  (b, s, g, n)   output projections
+    Returns (y (b, s, h, p), final_state (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    if s % chunk:
+        chunk = s  # single chunk for ragged smoke shapes
+    nc = s // chunk
+    rep = h // g
+
+    # dt-discretized input and decay
+    xdt = x.astype(jnp.float32) * dt[..., None]                # (b,s,h,p)
+    da = dt * A[None, None, :]                                 # (b,s,h)  <= 0
+
+    # chunk views
+    xc = xdt.reshape(b, nc, chunk, h, p)
+    dac = da.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)    # (b,h,nc,l)
+    Bc = jnp.repeat(B.astype(jnp.float32).reshape(b, nc, chunk, g, n), rep, axis=3)
+    Cc = jnp.repeat(C.astype(jnp.float32).reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    da_cum = jnp.cumsum(dac, axis=-1)                          # (b,h,nc,l)
+    L = jnp.exp(_segsum(dac))                                  # (b,h,nc,l,l)
+
+    # 1) intra-chunk (diagonal blocks): dot-product heavy — offloadable
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", Cc, Bc, L, xc)
+
+    # 2) per-chunk states: decayed contribution of each position to chunk end
+    decay_states = jnp.exp(da_cum[..., -1:] - da_cum)          # (b,h,nc,l)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", Bc, decay_states, xc)
+
+    # 3) inter-chunk recurrence over chunk boundary states
+    if initial_state is None:
+        init = jnp.zeros((b, 1, h, p, n), jnp.float32)
+    else:
+        init = initial_state.astype(jnp.float32)[:, None]
+    states = jnp.concatenate([init, states], axis=1)           # (b,nc+1,h,p,n)
+    chunk_decay = da_cum[..., -1]                              # (b,h,nc)
+    pad = jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(_segsum(pad))                        # (b,h,nc+1,nc+1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # 4) state -> output contribution within each chunk
+    state_decay_out = jnp.exp(da_cum)                          # (b,h,nc,l)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Cc, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def ssd_reference(x, dt, A, B, C,
+                  initial_state: Optional[jax.Array] = None):
+    """Naive per-step recurrence (the oracle for ssd_scan):
+       h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_tᵀ ;  y_t = C_t · h_t."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B.astype(jnp.float32), rep, axis=2)
+    Ch = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+    state = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+             else initial_state.astype(jnp.float32))
+
+    def step(state, t):
+        xt = x[:, t].astype(jnp.float32)          # (b,h,p)
+        dtt = dt[:, t].astype(jnp.float32)        # (b,h)
+        decay = jnp.exp(dtt * A[None, :])         # (b,h)
+        upd = jnp.einsum("bhn,bhp->bhpn", Bh[:, t], xt * dtt[..., None])
+        state = state * decay[..., None, None] + upd
+        yt = jnp.einsum("bhn,bhpn->bhp", Ch[:, t], state)
+        return state, yt
+
+    state, ys = jax.lax.scan(step, state, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3), state        # (b,s,h,p), (b,h,p,n)
+
+
+# ---------------------------------------------------------------------------
+# Full mixer: in_proj -> conv -> SSD -> gated norm -> out_proj
+# ---------------------------------------------------------------------------
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    ssm = cfg.ssm
+    di = ssm.d_inner(cfg.d_model)
+    gN = ssm.n_groups * ssm.d_state
+    nh = ssm.n_heads(cfg.d_model)
+    z, xBC, dt = jnp.split(zxbcdt, [di, di + di + 2 * gN], axis=-1)
+    return z, xBC, dt, di, gN, nh
+
+
+def ssm_mixer(p: dict, cfg: ModelConfig, u: jax.Array, *,
+              engine=None) -> jax.Array:
+    """Full-sequence SSD mixer. u: (B, S, d_model) -> (B, S, d_model)."""
+    ssm = cfg.ssm
+    b, s, _ = u.shape
+    zxbcdt = layers.linear(p["in_proj"], u, engine, "ssm.in_proj")
+    z, xBC, dt, di, gN, nh = _split_proj(cfg, zxbcdt.astype(u.dtype))
+
+    # causal depthwise conv over the (x, B, C) channels
+    w = p["conv_w"].astype(jnp.float32)            # (d_conv, conv_dim)
+    xpad = jnp.pad(xBC.astype(jnp.float32), ((0, 0), (ssm.d_conv - 1, 0), (0, 0)))
+    conv = sum(xpad[:, i:i + s] * w[i] for i in range(ssm.d_conv))
+    xBC = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32))
+
+    x, B, C = jnp.split(xBC, [di, di + gN], axis=-1)
+    x = x.reshape(b, s, nh, ssm.head_dim)
+    B = B.reshape(b, s, ssm.n_groups, ssm.d_state)
+    C = C.reshape(b, s, ssm.n_groups, ssm.d_state)
+    x = ctx.constrain(x, "batch", None, "model", None)
+    A = -jnp.exp(p["A_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    y, _ = ssd_scan(x, dt, A, B, C, ssm.chunk)
+    y = y + x.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, di)
+
+    # gated RMSNorm (Mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = layers.norm_apply(p["norm"], y.astype(u.dtype), "rmsnorm")
+    return layers.linear(p["out_proj"], y, engine, "ssm.out_proj").astype(u.dtype)
+
+
+def ssm_decode_step(p: dict, cfg: ModelConfig, u: jax.Array,
+                    state: SSMState, *, engine=None
+                    ) -> Tuple[jax.Array, SSMState]:
+    """One-token recurrent update. u: (B, 1, d_model)."""
+    ssm = cfg.ssm
+    b = u.shape[0]
+    zxbcdt = layers.linear(p["in_proj"], u[:, 0], engine, "ssm.in_proj")
+    z, xBC, dt, di, gN, nh = _split_proj(cfg, zxbcdt)
+
+    # rolling conv window: state.conv holds the previous d_conv-1 inputs
+    window = jnp.concatenate(
+        [state.conv.astype(jnp.float32), xBC.astype(jnp.float32)[:, None]], axis=1)
+    w = p["conv_w"].astype(jnp.float32)
+    conv = jnp.einsum("btc,tc->bc", window, w) + p["conv_b"].astype(jnp.float32)
+    xBC_a = jax.nn.silu(conv)
+    new_conv = window[:, 1:].astype(state.conv.dtype)
+
+    x, B, C = jnp.split(xBC_a, [di, di + gN], axis=-1)
+    x = x.reshape(b, nh, ssm.head_dim)
+    B = B.reshape(b, ssm.n_groups, ssm.d_state)
+    C = C.reshape(b, ssm.n_groups, ssm.d_state)
+    rep = nh // ssm.n_groups
+    Bh = jnp.repeat(B, rep, axis=1)
+    Ch = jnp.repeat(C, rep, axis=1)
+    A = -jnp.exp(p["A_log"])
+    dt1 = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (b, nh)
+
+    decay = jnp.exp(dt1 * A[None, :])
+    upd = jnp.einsum("bhn,bhp->bhpn", Bh, x * dt1[..., None])
+    new_ssd = state.ssd * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, new_ssd)
+    y = y + x * p["D"][None, :, None]
+    y = y.reshape(b, di)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = layers.norm_apply(p["norm"], y.astype(u.dtype), "rmsnorm")
+    out = layers.linear(p["out_proj"], y[:, None], engine, "ssm.out_proj")
+    return out.astype(u.dtype), SSMState(new_conv, new_ssd, state.length + 1)

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWState, adamw_init, adamw_update, global_norm, lr_schedule,
+)
+from repro.optim.compression import (  # noqa: F401
+    ef_compress_grads, ef_init,
+)

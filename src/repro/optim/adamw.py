@@ -1,0 +1,122 @@
+"""AdamW from scratch on pytrees, with warmup+cosine schedule, global-norm
+clipping, and selectable moment storage (f32 / bf16 / Q8_0 blocks).
+
+The Q8_0 moment option is the paper's block-quantization format applied to
+optimizer state (8-bit-Adam style): moments are stored as int8 blocks of 32
+with an fp16 scale, dequantized for the update and requantized after. This
+reuses ``core.qformats`` verbatim — the paper's technique as a *training*
+memory feature, beyond its serving role.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+from repro.core.qformats import QBLOCK, QTensor, dequantize_q8_0, quantize_q8_0
+
+
+class AdamWState(NamedTuple):
+    mu: dict       # first moment, dtype per cfg.state_dtype
+    nu: dict       # second moment
+    count: jax.Array  # scalar int32 step counter
+
+
+def _quantizable(leaf) -> bool:
+    return (leaf.ndim >= 2 and leaf.shape[-1] % QBLOCK == 0
+            and jnp.issubdtype(leaf.dtype, jnp.floating))
+
+
+def _store(x: jax.Array, like, state_dtype: str):
+    if state_dtype == "q8_0" and _quantizable(like):
+        return quantize_q8_0(x)
+    if state_dtype == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    return x.astype(jnp.float32)
+
+
+def _load(x) -> jax.Array:
+    if isinstance(x, QTensor):
+        return dequantize_q8_0(x)
+    return x.astype(jnp.float32)
+
+
+def _is_moment_leaf(x) -> bool:
+    return isinstance(x, QTensor)
+
+
+def adamw_init(params, cfg: Optional[OptimizerConfig] = None) -> AdamWState:
+    cfg = cfg or OptimizerConfig()
+
+    def zero(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return _store(z, p, cfg.state_dtype)
+
+    return AdamWState(
+        mu=jax.tree_util.tree_map(zero, params),
+        nu=jax.tree_util.tree_map(zero, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to 10% of peak."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.lr * (0.1 + 0.9 * 0.5 * (1.0 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_update(grads, state: AdamWState, params,
+                 cfg: OptimizerConfig) -> Tuple[dict, AdamWState, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics).
+    Weight decay is decoupled and skipped for 1D leaves (norms, biases)."""
+    grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+    count = state.count + 1
+    t = count.astype(jnp.float32)
+    lr = lr_schedule(cfg, count)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, mu_s, nu_s):
+        g = g.astype(jnp.float32)
+        mu = cfg.b1 * _load(mu_s) + (1.0 - cfg.b1) * g
+        nu = cfg.b2 * _load(nu_s) + (1.0 - cfg.b2) * g * g
+        mhat = mu / bc1
+        vhat = nu / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return newp, _store(mu, p, cfg.state_dtype), _store(nu, p, cfg.state_dtype)
+
+    is_q = lambda x: isinstance(x, QTensor)
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = jax.tree_util.tree_leaves(state.mu, is_leaf=is_q)
+    flat_nu = jax.tree_util.tree_leaves(state.nu, is_leaf=is_q)
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gn, "lr": lr}
+    return new_p, AdamWState(new_mu, new_nu, count), metrics

@@ -1,0 +1,4 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HW, CollectiveStats, RooflineReport, analyze_compiled,
+    model_flops, parse_collectives, roofline_terms,
+)

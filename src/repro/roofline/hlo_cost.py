@@ -1,0 +1,374 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE — for a
+scan-over-layers model (or microbatched train step) that undercounts flops,
+bytes, and collectives by the trip count (80x for qwen1.5-110b). This module
+re-derives the three roofline inputs directly from the post-SPMD HLO text:
+
+  * flops        — 2 x |result| x |contracting dims| per dot (incl. dots
+                   nested in fusions), scaled by enclosing while trip counts.
+                   Elementwise flops are counted as 1/element of each fusion
+                   root (second-order; dots dominate every assigned cell).
+  * bytes        — per-instruction operand + result bytes at top scope of
+                   each computation (fusion internals are free — matching
+                   XLA's own convention), scaled by trip counts. This is an
+                   HBM-traffic proxy: weights re-read per loop iteration.
+  * collectives  — result-shape bytes per collective site x trip count,
+                   plus a ring-model "wire bytes" variant.
+
+Trip counts come from each while's condition computation (the loop bound
+constant), cross-checkable against the model's known layer/microbatch
+structure. KNOWN INFLATION (documented in EXPERIMENTS.md): the CPU backend
+upcasts bf16 dot operands to f32 before gathers/dots, so byte terms are up
+to 2x a real TPU lowering — treated as a conservative upper bound.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COMP_START = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+# result group is lazy up to the first "opcode(" token — tuple results may
+# contain /*index=N*/ comments, so a greedy/char-class match misparses
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_ATTR_COMP_RE = {
+    "body": re.compile(r"body=%?([\w.\-]+)"),
+    "condition": re.compile(r"condition=%?([\w.\-]+)"),
+    "calls": re.compile(r"calls=%?([\w.\-]+)"),
+}
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_PARAM_RE = re.compile(r"([\w.\-]+):\s*((?:\([^)]*\))|[\w]+\[[0-9,]*\](?:\{[^}]*\})?)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_info(text: str) -> Tuple[int, int]:
+    """(total bytes, total elements) over every dtype[dims] in ``text``."""
+    nbytes = nelem = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = int(np.prod([int(d) for d in dims.split(",") if d])) if dims else 1
+        nelem += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return nbytes, nelem
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_text: str
+    args_text: str
+    result_bytes: int
+    result_elems: int
+    operands: List[str]
+    called: Dict[str, str]         # role -> computation name
+
+
+@dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]         # param name -> shape text
+    instrs: List[Instr] = field(default_factory=list)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_raw: float = 0.0
+    coll_wire: float = 0.0
+    coll_by_op: Dict[str, float] = field(default_factory=dict)
+    coll_count: float = 0.0
+    while_trips: Dict[str, int] = field(default_factory=dict)
+    largest_collectives: List[Tuple[float, str]] = field(default_factory=list)
+
+    def add_coll(self, op: str, nbytes: float, group: int, mult: float,
+                 desc: str):
+        n = max(group, 2)
+        if op == "all-reduce":
+            wire = 2.0 * (n - 1) / n * nbytes
+        elif op in ("all-gather", "all-to-all"):
+            wire = (n - 1) / n * nbytes
+        elif op == "reduce-scatter":
+            wire = (n - 1) * nbytes
+        else:
+            wire = nbytes
+        self.coll_raw += nbytes * mult
+        self.coll_wire += wire * mult
+        self.coll_count += mult
+        self.coll_by_op[op] = self.coll_by_op.get(op, 0.0) + nbytes * mult
+        self.largest_collectives.append((nbytes * mult, desc))
+        self.largest_collectives.sort(reverse=True)
+        del self.largest_collectives[10:]
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_marker = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_START.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                name = m.group(2)
+                params = dict(_PARAM_RE.findall(m.group(3)))
+                cur = Computation(name=name, params=params)
+                if m.group(1):
+                    entry_marker = name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, result_text, opcode, rest = m.groups()
+        rb, re_ = _shape_info(result_text)
+        # split args from attrs at the matching close paren (approximate:
+        # attrs of interest are searchable anywhere in ``rest``)
+        called = {}
+        for role, rx in _ATTR_COMP_RE.items():
+            cm = rx.search(rest)
+            if cm:
+                called[role] = cm.group(1)
+        instr = Instr(name=name, opcode=opcode, result_text=result_text,
+                      args_text=rest, result_bytes=rb, result_elems=re_,
+                      operands=_OPERAND_RE.findall(rest.split(" metadata=")[0]),
+                      called=called)
+        cur.instrs.append(instr)
+        cur.by_name[name] = instr
+    if entry_marker:
+        comps["__entry__"] = comps[entry_marker]
+    return comps
+
+
+_SLICE_OPS = ("dynamic-slice", "gather")
+_UPDATE_OPS = ("dynamic-update-slice", "scatter")
+
+
+_PASSTHROUGH = ("convert", "bitcast", "copy", "reshape", "transpose",
+                "broadcast")
+
+
+def _param_slice_bytes(called: Computation, comps) -> Dict[int, int]:
+    """For a fused computation: parameters whose every (transitive, through
+    unary pass-through ops) consumer is a slice-family op touch slice-sized
+    bytes, not their full buffer (the scan-xs pattern: stacked (R, ...)
+    tensors sliced once per iteration; fusions often interpose a convert
+    before the dynamic-update-slice). Returns {param_index: effective
+    bytes}."""
+    out: Dict[int, int] = {}
+    params = {}
+    for instr in called.instrs:
+        if instr.opcode == "parameter":
+            m = re.match(r"\s*(\d+)\s*\)", instr.args_text)
+            if m:
+                params[instr.name] = int(m.group(1))
+
+    def final_consumers(name, depth=0):
+        """Consumers of ``name``, looking through pass-through ops."""
+        result = []
+        for c in called.instrs:
+            if name not in c.operands:
+                continue
+            if c.opcode in _PASSTHROUGH and depth < 4:
+                result.extend(final_consumers(c.name, depth + 1))
+            else:
+                result.append((c, name))
+        return result
+
+    for pname, pidx in params.items():
+        fc = final_consumers(pname)
+        if fc and all(c.opcode in _SLICE_OPS or
+                      (c.opcode in _UPDATE_OPS and c.operands
+                       and (c.operands[0] == via or c.operands[0] == pname))
+                      for c, via in fc):
+            eff = 0
+            for c, _via in fc:
+                if c.opcode in _SLICE_OPS:
+                    eff += c.result_bytes
+                else:  # update: the written region = update operand size
+                    upd = c.operands[1] if len(c.operands) > 1 else None
+                    if upd and upd in called.by_name:
+                        eff += called.by_name[upd].result_bytes
+                    else:
+                        eff += c.result_bytes // 8
+            out[pidx] = eff
+    return out
+
+
+def _operand_bytes(comp: Computation, instr: Instr,
+                   comps: Dict[str, Computation]) -> int:
+    """HBM bytes read by one instruction. Slice-family ops (and fusions
+    whose params feed only slice ops) count the slice, not the buffer —
+    matching XLA's utilization-aware accounting; without this, scanned
+    stacked tensors count R x full-buffer per step."""
+    if instr.opcode in _SLICE_OPS:
+        return instr.result_bytes  # read = slice size (indices negligible)
+    if instr.opcode in _UPDATE_OPS:
+        upd = instr.operands[1] if len(instr.operands) > 1 else None
+        if upd and upd in comp.by_name:
+            return comp.by_name[upd].result_bytes
+        return instr.result_bytes
+
+    slice_adjust: Dict[int, int] = {}
+    if instr.opcode in ("fusion", "call"):
+        tgt = comps.get(instr.called.get("calls", ""))
+        if tgt is not None:
+            slice_adjust = _param_slice_bytes(tgt, comps)
+
+    total = 0
+    for i, op in enumerate(instr.operands):
+        if i in slice_adjust:
+            total += slice_adjust[i]
+        elif op in comp.by_name:
+            total += comp.by_name[op].result_bytes
+        elif op in comp.params:
+            total += _shape_info(comp.params[op])[0]
+    return total
+
+
+def _operand_shape_elems(comp: Computation, op_name: str,
+                         dim_filter=None) -> Optional[List[int]]:
+    """Dims of an operand's (single) result shape."""
+    text = None
+    if op_name in comp.by_name:
+        text = comp.by_name[op_name].result_text
+    elif op_name in comp.params:
+        text = comp.params[op_name]
+    if text is None:
+        return None
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return dims
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop bound from the condition computation: the largest int constant
+    compared against the induction variable."""
+    best = 1
+    for instr in cond.instrs:
+        if instr.opcode == "constant":
+            # args_text holds everything after "constant(" -> "80), ..."
+            cm = re.match(r"\s*(-?\d+)\s*\)", instr.args_text)
+            if cm:
+                best = max(best, int(cm.group(1)))
+    return best
+
+
+def _dot_flops(comp: Computation, instr: Instr) -> float:
+    m = _CONTRACT_RE.search(instr.args_text)
+    contract_elems = 1
+    if m and instr.operands:
+        dims = _operand_shape_elems(comp, instr.operands[0])
+        if dims:
+            for di in m.group(1).split(","):
+                if di != "" and int(di) < len(dims):
+                    contract_elems *= dims[int(di)]
+    return 2.0 * instr.result_elems * contract_elems
+
+
+def _group_size(args_text: str) -> int:
+    g = re.search(r"replica_groups=\[(\d+),(\d+)\]", args_text)
+    if g:
+        return int(g.group(2))
+    g = re.search(r"replica_groups=\{\{([0-9, ]+)\}", args_text)
+    if g:
+        return len(g.group(1).split(","))
+    return 2
+
+
+def _flops_of_computation(comp: Computation, comps, memo) -> float:
+    """Dot flops (recursing into fusions/calls), elementwise ~1/elem."""
+    if comp.name in memo:
+        return memo[comp.name]
+    memo[comp.name] = 0.0  # cycle guard
+    total = 0.0
+    for instr in comp.instrs:
+        if instr.opcode == "dot":
+            total += _dot_flops(comp, instr)
+        elif instr.opcode in ("fusion", "call"):
+            tgt = instr.called.get("calls")
+            if tgt and tgt in comps:
+                total += _flops_of_computation(comps[tgt], comps, memo)
+        elif instr.opcode == "while":
+            body = comps.get(instr.called.get("body", ""))
+            cond = comps.get(instr.called.get("condition", ""))
+            trip = _trip_count(cond) if cond else 1
+            if body:
+                total += trip * _flops_of_computation(body, comps, {})
+        elif instr.opcode == "conditional":
+            for tgt in _OPERAND_RE.findall(instr.args_text):
+                if tgt in comps:
+                    total += _flops_of_computation(comps[tgt], comps, memo)
+        elif instr.opcode not in ("parameter", "constant", "tuple",
+                                  "get-tuple-element", "bitcast", "copy"):
+            total += instr.result_elems  # elementwise estimate
+    memo[comp.name] = total
+    return total
+
+
+def _walk_bytes_coll(comp: Computation, comps, totals: CostTotals,
+                     mult: float, seen_while: Dict[str, int]):
+    """Per-instruction bytes + collectives at ``comp`` top scope, recursing
+    into while bodies with trip multipliers."""
+    for instr in comp.instrs:
+        op = instr.opcode
+        if op in ("parameter", "constant", "tuple", "get-tuple-element",
+                  "bitcast"):
+            continue
+        if op == "while":
+            body = comps.get(instr.called.get("body", ""))
+            cond = comps.get(instr.called.get("condition", ""))
+            trip = _trip_count(cond) if cond else 1
+            seen_while[instr.name] = trip
+            totals.while_trips[instr.name] = trip
+            if body:
+                _walk_bytes_coll(body, comps, totals, mult * trip, seen_while)
+            continue
+        base = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            continue
+        if base in COLLECTIVES:
+            totals.add_coll(base, instr.result_bytes,
+                            _group_size(instr.args_text), mult,
+                            f"x{mult:g} {instr.result_text} {base}")
+        wb = instr.result_bytes
+        if instr.opcode in _UPDATE_OPS:  # in-place: write = update region
+            upd = instr.operands[1] if len(instr.operands) > 1 else None
+            if upd and upd in comp.by_name:
+                wb = comp.by_name[upd].result_bytes
+        totals.bytes += mult * (wb + _operand_bytes(comp, instr, comps))
+
+
+def analyze_hlo_text(text: str) -> CostTotals:
+    comps = parse_module(text)
+    totals = CostTotals()
+    entry = comps.get("__entry__")
+    if entry is None:
+        return totals
+    totals.flops = _flops_of_computation(entry, comps, {})
+    _walk_bytes_coll(entry, comps, totals, 1.0, {})
+    return totals

@@ -1,0 +1,4 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_specs, cache_specs, named, param_specs, spec_for_path,
+    train_state_specs,
+)

@@ -1,0 +1,115 @@
+"""Activation-sharding context: lets model code emit GSPMD sharding
+constraints without threading a mesh through every call signature.
+
+``activation_sharding(mesh)`` activates constraints; ``constrain(x, ...)``
+is a no-op when no mesh is active (CPU smoke tests) and otherwise applies
+``with_sharding_constraint`` with divisibility-checked axes:
+
+    constrain(x, "batch", None, "model", None)
+
+tokens: "batch" -> (pod, data) merged, "model" -> the model axis, "data" ->
+the data axis, None -> unconstrained. A token whose axis size does not
+divide the dim falls back to None (e.g. whisper's 6 heads on a 16-way model
+axis), keeping one call site valid for all architectures.
+
+Why this exists: GSPMD propagation alone loses the batch sharding inside
+scanned/checkpointed attention chunks (observed: unsharded f32
+[256,...,2048,4096] attention-logit buffers in the whisper train_4k
+dry-run). Pinning batch/heads on the handful of big activation tensors
+keeps every temp 1/(data*model)-sized without constraining the compiler
+elsewhere.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextmanager
+def activation_sharding(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def _resolve(token, dim: int, mesh: Mesh):
+    if token is None:
+        return None
+    if token == "batch":
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if size > 1 and dim % size == 0:
+            return axes if len(axes) > 1 else axes[0]
+        # fall back to the data axis alone (e.g. batch 8 on a 32-way pod+data)
+        if "data" in mesh.axis_names and dim % mesh.shape["data"] == 0 \
+                and mesh.shape["data"] > 1:
+            return "data"
+        return None
+    if token == "seq":
+        # long-context S dim: absorb every non-pod axis that divides
+        axes = tuple(a for a in ("data", "model")
+                     if a in mesh.axis_names and mesh.shape[a] > 1)
+        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if axes and dim % size == 0:
+            return axes if len(axes) > 1 else axes[0]
+        if "model" in mesh.axis_names and dim % mesh.shape["model"] == 0:
+            return "model"
+        return None
+    if token == "model_force":
+        # uneven sharding: GSPMD pads the dim to the axis size internally
+        # (Megatron-style head padding, e.g. 40 heads -> 16x3). Use when
+        # the padding waste beats the alternative's collectives.
+        return "model" if "model" in mesh.axis_names else None
+    if token in mesh.axis_names:
+        return token if dim % mesh.shape[token] == 0 else None
+    return None
+
+
+def batch_shard_size(mesh: Mesh) -> int:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def constrain(x: jax.Array, *tokens) -> jax.Array:
+    """Pin ONLY the dims we resolve; everything else stays UNCONSTRAINED.
+
+    Forcing replication on unresolved dims is actively harmful: e.g.
+    qwen2.5's 40 heads don't divide the 16-way model axis, and a
+    (batch, None, None, None) constraint on its attention logits forced
+    GSPMD to all-gather 1.9 TiB of f32 per step that it would otherwise
+    have kept partially sharded. UNCONSTRAINED keeps the batch anchor
+    (which propagation loses inside scanned remat bodies) without
+    overriding the compiler elsewhere.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    if len(tokens) != x.ndim:
+        raise ValueError(f"{len(tokens)} tokens for rank-{x.ndim} tensor")
+    entries = []
+    any_pinned = False
+    for t, d in zip(tokens, x.shape):
+        r = _resolve(t, d, mesh)
+        if r is None:
+            entries.append(P.UNCONSTRAINED)
+        else:
+            entries.append(r)
+            any_pinned = True
+    if not any_pinned:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))

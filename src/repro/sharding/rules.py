@@ -1,0 +1,281 @@
+"""Sharding rule engine: param/batch/cache pytrees -> PartitionSpecs.
+
+Strategy (DESIGN.md §7; MaxText-style 2D sharding on a fixed mesh):
+
+  * "model" axis (16)           — tensor parallelism: attention heads, d_ff,
+                                  vocab, MoE experts (EP), SSD inner dim.
+  * "data" axis (16)            — batch DP + FSDP weight sharding (ZeRO-3
+                                  within a pod): the *other* matrix dim of
+                                  every big weight shards here, so per-device
+                                  param bytes scale 1/(data*model).
+  * "pod" axis (2, multi-pod)   — pure DP across pods: params replicated
+                                  pod-wise (cheap intra-pod all-gathers stay
+                                  on-pod; only gradient all-reduce crosses).
+
+Every rule is divisibility-checked against the actual mesh: a dim that does
+not divide falls back down the candidate list (e.g. whisper's vocab 51865 on
+a 16-way model axis -> replicated). This keeps one rule set valid for all 10
+architectures x 3 meshes, which is what makes the 40-cell dry-run tractable.
+
+Rules are keyed on path regexes over the param tree ('attn/q/w', 'moe/w_up',
+...). Q8_0 QTensor leaves ('.../w/qs', '.../w/scales') inherit the dense w's
+out-dim sharding, so the serving path shards identically to training.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Candidate tokens: each dim gets a list of candidates, first divisible wins.
+#   "model"  -> the model axis
+#   "fsdp"   -> the data axis (weight sharding within a pod)
+#   "batch"  -> (pod, data) combined (activations' batch dim)
+#   "expert" -> the model axis (EP), kept distinct for readability
+#   None     -> replicated
+MODEL, FSDP, BATCH, EXPERT = "model", "fsdp", "batch", "expert"
+
+# (regex over '/'-joined path, trailing-dims candidates, innermost last)
+_RULES: Sequence[Tuple[str, Tuple[Tuple[Optional[str], ...], ...]]] = (
+    # --- embeddings / readout ---
+    (r"embed/table$",        ((MODEL,), (FSDP,))),
+    (r"lm_head/w$",          ((MODEL,), (FSDP,))),
+    (r"(enc_pos|dec_pos)/table$", ((), (FSDP,))),
+    (r"projector/w$",        ((FSDP,), ())),
+    (r"frontend/w$",         ((FSDP,), ())),
+    # --- attention (w stored (out, in)) ---
+    (r"attn/q/w$",           ((MODEL,), (FSDP,))),
+    (r"attn/[kv]/w$",        ((MODEL,), (FSDP,))),
+    (r"attn/o/w$",           ((FSDP,), (MODEL,))),
+    (r"attn/[qkvo]/b$",      ((MODEL,),)),
+    # --- dense FFN ---
+    (r"(up|gate)/w$",        ((MODEL,), (FSDP,))),
+    (r"down/w$",             ((FSDP,), (MODEL,))),
+    (r"(up|gate|down)/b$",   ((MODEL,),)),
+    # --- MoE (expert-stacked (E, in, out)) ---
+    (r"moe/router/w$",       ((), (FSDP,))),
+    (r"moe/w_(up|gate)$",    ((EXPERT,), (FSDP,), ())),
+    (r"moe/w_down$",         ((EXPERT,), (), (FSDP,))),
+    # --- SSD mixer ---
+    (r"ssm/in_proj/w$",      ((MODEL,), (FSDP,))),
+    (r"ssm/out_proj/w$",     ((FSDP,), (MODEL,))),
+    (r"ssm/conv_[wb]$",      None),        # tiny; replicate
+    (r"ssm/(A_log|D|dt_bias)$", None),
+    # --- norms and everything 1D ---
+    (r"norm", None),
+)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _resolve(token: Optional[str], mesh: Mesh):
+    """Token -> (mesh axes tuple, total size)."""
+    if token is None:
+        return None, 1
+    if token in (MODEL, EXPERT):
+        return ("model",), _axis_size(mesh, "model")
+    if token == FSDP:
+        return ("data",), _axis_size(mesh, "data")
+    if token == BATCH:
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        size = int(np.prod([_axis_size(mesh, a) for a in axes])) if axes else 1
+        return axes or None, size
+    raise ValueError(token)
+
+
+def _dim_entry(candidates, dim: int, mesh: Mesh):
+    """First divisible candidate for one dim. candidates: tuple of tokens."""
+    for tok in candidates:
+        axes, size = _resolve(tok, mesh)
+        if axes is None:
+            return None
+        if size > 1 and dim % size == 0:
+            return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def _spec_from_template(template, shape, mesh: Mesh) -> P:
+    """Right-align the trailing-dim template against ``shape`` (leading
+    stacked-layer dims replicate) and divisibility-check each entry."""
+    if template is None:
+        return P()
+    ndim = len(shape)
+    t = len(template)
+    entries = [None] * (ndim - t) if ndim >= t else []
+    tpl = template[-ndim:] if t > ndim else template
+    for cand, dim in zip(tpl, shape[ndim - len(tpl):]):
+        entries.append(_dim_entry(cand, dim, mesh))
+    # a mesh axis may appear at most once per spec: first dim wins
+    seen = set()
+    for i, e in enumerate(entries):
+        axes = e if isinstance(e, tuple) else ((e,) if e else ())
+        if any(a in seen for a in axes):
+            entries[i] = None
+        seen.update(axes)
+    # strip trailing Nones for tidier specs
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+_FALLBACK_2D = ((MODEL,), (FSDP,))
+
+
+def spec_for_path(path_str: str, shape, mesh: Mesh) -> P:
+    """The rule lookup for one leaf. QTensor legs map onto the dense rule."""
+    # Q8_0 leaves: '<w-path>/qs' (N, K/32, 32) and '<w-path>/scales' (N, K/32)
+    q_m = re.search(r"(.*)/(qs|scales)$", path_str)
+    lookup = q_m.group(1) if q_m else path_str
+    template = _FALLBACK_2D if len(shape) >= 2 else None
+    for pattern, tpl in _RULES:
+        if re.search(pattern, lookup):
+            template = tpl
+            break
+    if q_m and template is not None:
+        # Quantized legs mirror the dense rule. qs = W with its last dim
+        # split (..., K) -> (..., K/32, 32): append a replicated intra-block
+        # entry so every leading rule stays aligned (right-alignment then
+        # puts the dense K rule on the K/32 dim). scales = W with K -> K/32:
+        # the dense template applies unchanged. Divisibility checks and the
+        # duplicate-axis guard handle the rest.
+        if q_m.group(2) == "qs":
+            template = (*template, ())
+    return _spec_from_template(template, shape, mesh)
+
+
+def param_specs(params, mesh: Mesh):
+    """PartitionSpec pytree matching ``params`` (works for opt-state pytrees
+    too — they mirror param paths)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: (P() if not getattr(l, "shape", ())
+                      else spec_for_path(_path_str(p), l.shape, mesh)),
+        params)
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation / cache specs
+# ---------------------------------------------------------------------------
+def _batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_specs(batch: dict, mesh: Mesh):
+    """Shard every batch leaf's dim 0 over (pod, data) when divisible;
+    otherwise (long_500k's B=1) shard the sequence dim over data."""
+    axes = _batch_axes(mesh)
+    bsize = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+    def leaf(path, x):
+        shape = x.shape
+        if not shape:
+            return P()
+        if shape[0] % bsize == 0 and bsize > 1:
+            return P(axes if len(axes) > 1 else axes[0])
+        if len(shape) >= 2 and shape[1] % _axis_size(mesh, "data") == 0:
+            return P(None, "data")
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf, batch)
+
+
+def cache_specs(state, mesh: Mesh, kv_heads: int, head_dim: int):
+    """Decode-state specs.
+
+    KV caches are stacked (R, B, S, Hkv, hd): batch shards over (pod, data)
+    when divisible; the model axis lands on Hkv when it divides, otherwise
+    on S (flash-decode sequence parallelism — each model shard owns a cache
+    slice; models/attention.py places the matching constraint). For B=1
+    long-context cells S takes every available axis.
+    SSM states (R, B, H, P, N) shard H over model; conv states shard their
+    channel dim over model.
+    """
+    axes = _batch_axes(mesh)
+    bsize = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    baxis = axes if len(axes) > 1 else (axes[0] if axes else None)
+    msize = _axis_size(mesh, "model")
+    dsize = _axis_size(mesh, "data")
+
+    def leaf(path, x):
+        shape = x.shape
+        ps = _path_str(path).lower()
+        if len(shape) <= 1:
+            return P()
+        entries = [None] * len(shape)
+        bdim = 1  # leading dim is the stacked layer dim R
+        batch_ok = shape[bdim] % bsize == 0 and bsize > 1
+        if batch_ok:
+            entries[bdim] = baxis
+        leaf_name = ps.rsplit("/", 1)[-1]
+        if "conv" in ps:  # (R, B, K, conv_dim)
+            if len(shape) >= 4 and shape[-1] % msize == 0:
+                entries[-1] = "model"
+        elif leaf_name in ("k_scale", "v_scale") and len(shape) == 4:
+            # int8-KV scales (R, B, S, Hkv): mirror the payload's S policy
+            if shape[3] % msize == 0:
+                entries[3] = "model"
+            elif batch_ok and shape[2] % msize == 0:
+                entries[2] = "model"
+            elif not batch_ok:
+                s_axes = tuple(a for a, sz in (("data", dsize),
+                                               ("model", msize)) if sz > 1)
+                sz = int(np.prod([mesh.shape[a] for a in s_axes])) or 1
+                if s_axes and shape[2] % sz == 0:
+                    entries[2] = s_axes if len(s_axes) > 1 else s_axes[0]
+        elif len(shape) == 5:
+            is_kv = leaf_name in ("k", "v", "k_qs", "v_qs") or "kv" in ps
+            if is_kv:  # (R, B, S, Hkv, hd)
+                if shape[3] % msize == 0:
+                    entries[3] = "model"
+                    if not batch_ok and shape[2] % dsize == 0 and dsize > 1:
+                        entries[2] = "data"
+                else:
+                    # S-sharding; B=1 cells put (data, model) both on S
+                    if batch_ok:
+                        s_axes = ("model",)
+                    else:
+                        s_axes = tuple(
+                            a for a, sz in (("data", dsize), ("model", msize))
+                            if sz > 1)
+                    sz = int(np.prod([mesh.shape[a] for a in s_axes])) or 1
+                    if s_axes and shape[2] % sz == 0:
+                        entries[2] = s_axes if len(s_axes) > 1 else s_axes[0]
+            else:      # ssd state (R, B, H, P, N)
+                if shape[2] % msize == 0:
+                    entries[2] = "model"
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(leaf, state)
+
+
+def train_state_specs(train_state, mesh: Mesh):
+    """TrainState {params, opt_state{mu,nu}, step, rng} -> specs. Optimizer
+    moments mirror their parameter's spec (path suffix matches)."""
+    return param_specs(train_state, mesh)
+
+
+def named(mesh: Mesh, spec_tree):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

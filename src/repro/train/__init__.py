@@ -1,0 +1,6 @@
+from repro.train.step import TrainState, init_train_state, make_train_step  # noqa: F401
+from repro.train.checkpoint import (  # noqa: F401
+    latest_checkpoint, load_checkpoint, save_checkpoint,
+)
+from repro.train.trainer import Trainer  # noqa: F401
+from repro.train.fault import StragglerMonitor, run_with_restarts  # noqa: F401

@@ -1,0 +1,110 @@
+"""Train-step builder: loss -> grads -> (optional int8-EF compression)
+-> AdamW, as one jit-able pure function over a TrainState pytree.
+
+The same builder serves the CPU smoke tests (no mesh), the examples, and
+the 512-device dry-run (jitted with in/out shardings by launch/dryrun.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, OptimizerConfig
+from repro.models import model as model_lib
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.compression import ef_compress_grads, ef_init
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    ef: Any              # int8-EF accumulators ({} when compression is off)
+    rng: jax.Array       # carried PRNG key (router jitter etc.)
+
+    @property
+    def step(self) -> jax.Array:
+        return self.opt.count
+
+
+def init_train_state(key, cfg: ModelConfig,
+                     opt_cfg: Optional[OptimizerConfig] = None,
+                     max_positions: int = 0) -> TrainState:
+    opt_cfg = opt_cfg or OptimizerConfig()
+    pkey, rkey = jax.random.split(key)
+    params = model_lib.init_params(pkey, cfg, max_positions)
+    return TrainState(
+        params=params,
+        opt=adamw_init(params, opt_cfg),
+        ef=ef_init(params) if opt_cfg.grad_compress == "int8_ef" else {},
+        rng=rkey,
+    )
+
+
+def make_train_step(cfg: ModelConfig,
+                    opt_cfg: Optional[OptimizerConfig] = None,
+                    *, engine=None, attn_chunk: int = 2048,
+                    microbatches: int = 1,
+                    grad_accum_dtype=jnp.float32,
+                    batch_sharding_constraint=None):
+    """Returns train_step(state, batch) -> (state', metrics). Pure; jit it
+    with whatever shardings the caller's mesh requires.
+
+    ``microbatches`` > 1 enables gradient accumulation: the global batch is
+    split on dim 0 and scanned, so per-step activation (and MoE dispatch)
+    memory scales 1/K — required to fit the large-model train_4k cells on a
+    256-chip pod. ``batch_sharding_constraint`` (a PartitionSpec pytree for
+    one microbatch) keeps the batch dim sharded through the reshape.
+    """
+    opt_cfg = opt_cfg or OptimizerConfig()
+    compress = opt_cfg.grad_compress == "int8_ef"
+
+    def loss_of(params, mb):
+        return model_lib.loss_fn(params, cfg, mb, engine=engine,
+                                 attn_chunk=attn_chunk)
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            (loss, aux), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                params, batch)
+            return loss, aux, grads
+
+        k = microbatches
+        mb = jax.tree_util.tree_map(
+            lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]), batch)
+
+        def micro(carry, mbatch):
+            if batch_sharding_constraint is not None:
+                mbatch = jax.lax.with_sharding_constraint(
+                    mbatch, batch_sharding_constraint)
+            gacc, lacc, aacc = carry
+            (loss, aux), g = jax.value_and_grad(loss_of, has_aux=True)(
+                params, mbatch)
+            gacc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(grad_accum_dtype), gacc, g)
+            return (gacc, lacc + loss, aacc + aux["moe_aux"]), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, grad_accum_dtype), params)
+        (gacc, lsum, asum), _ = jax.lax.scan(
+            micro, (zeros, jnp.zeros((), jnp.float32),
+                    jnp.zeros((), jnp.float32)), mb)
+        grads = jax.tree_util.tree_map(lambda g: g / k, gacc)
+        aux = {"ce": lsum / k - asum / k, "moe_aux": asum / k,
+               "ntok": jnp.zeros((), jnp.float32)}
+        return lsum / k, aux, grads
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        loss, aux, grads = grads_of(state.params, batch)
+        new_ef = state.ef
+        if compress:
+            grads, new_ef, _ = ef_compress_grads(grads, state.ef)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, opt_cfg)
+        rng, _ = jax.random.split(state.rng)
+        metrics = {"loss": loss.astype(jnp.float32), **aux, **opt_metrics}
+        return TrainState(new_params, new_opt, new_ef, rng), metrics
+
+    return train_step

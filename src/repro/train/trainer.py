@@ -1,0 +1,119 @@
+"""The Trainer: wires data stream, train_step, checkpointing, straggler
+monitoring, and preemption into one supervised loop.
+
+Mesh-optional: on CPU smoke runs it plain-jits the step; under a mesh it
+jits with the sharding rules from sharding/rules.py (params/opt sharded,
+batch sharded on (pod, data), donated buffers for in-place update).
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, OptimizerConfig, RunConfig, ShapeConfig
+from repro.data.pipeline import make_stream
+from repro.sharding import rules as shard_rules
+from repro.train import checkpoint as ckpt_lib
+from repro.train.fault import PreemptionHandler, StragglerMonitor
+from repro.train.step import TrainState, init_train_state, make_train_step
+
+
+@dataclass
+class Trainer:
+    run: RunConfig
+    mesh: Optional[Any] = None              # jax.sharding.Mesh
+    engine: Any = None                      # core.offload.OffloadEngine
+    install_signal_handler: bool = False
+    fault_hook: Optional[Callable[[int], None]] = None  # tests: raise at step N
+    vocab_cap: Optional[int] = None         # smoke: cap synthetic vocab
+
+    state: Optional[TrainState] = None
+    history: List[Dict[str, float]] = field(default_factory=list)
+    monitor: StragglerMonitor = field(default_factory=StragglerMonitor)
+
+    def __post_init__(self):
+        self.stream = make_stream(self.run.model, self.run.shape,
+                                  seed=self.run.seed,
+                                  vocab_cap=self.vocab_cap)
+        self._step_fn = None
+        self._preempt = PreemptionHandler(install=self.install_signal_handler)
+        self._start_step = 0
+
+    # ------------------------------------------------------------------
+    def _build_step(self):
+        step = make_train_step(self.run.model, self.run.optimizer,
+                               engine=self.engine)
+        if self.mesh is None:
+            return jax.jit(step, donate_argnums=(0,))
+        state_specs = shard_rules.train_state_specs(self.state, self.mesh)
+        batch = self.stream.batch_at(0)
+        batch_specs = shard_rules.batch_specs(batch, self.mesh)
+        return jax.jit(
+            step,
+            in_shardings=(shard_rules.named(self.mesh, state_specs),
+                          shard_rules.named(self.mesh, batch_specs)),
+            donate_argnums=(0,),
+        )
+
+    def _init_or_restore(self):
+        ckpt = ckpt_lib.latest_checkpoint(self.run.checkpoint_dir)
+        key = jax.random.PRNGKey(self.run.seed)
+        self.state = init_train_state(key, self.run.model, self.run.optimizer,
+                                      max_positions=self.run.shape.seq_len)
+        if ckpt is not None:
+            shardings = None
+            if self.mesh is not None:
+                specs = shard_rules.train_state_specs(self.state, self.mesh)
+                shardings = shard_rules.named(self.mesh, specs)
+            self.state, manifest = ckpt_lib.load_checkpoint(
+                ckpt, self.state, shardings=shardings)
+            self._start_step = manifest["cursor"]["step"]
+        else:
+            self._start_step = 0
+
+    # ------------------------------------------------------------------
+    def train(self, steps: Optional[int] = None) -> Dict[str, float]:
+        """Run (or resume) the loop. Returns final metrics."""
+        if self.state is None:
+            self._init_or_restore()
+        if self._step_fn is None:
+            self._step_fn = self._build_step()
+
+        steps = steps if steps is not None else self.run.steps
+        metrics: Dict[str, float] = {}
+        for s in range(self._start_step, steps):
+            if self.fault_hook is not None:
+                self.fault_hook(s)
+            t0 = time.perf_counter()
+            batch = self.stream.batch_at(s)
+            self.state, m = self._step_fn(self.state, batch)
+            jax.block_until_ready(m["loss"])
+            dt = time.perf_counter() - t0
+            straggler = self.monitor.observe(s, dt)
+            metrics = {k: float(np.asarray(v)) for k, v in m.items()}
+            metrics.update(step=s, dt_s=dt, straggler=float(straggler))
+            self.history.append(metrics)
+
+            final_step = s == steps - 1
+            want_ckpt = (self.run.checkpoint_every
+                         and (s + 1) % self.run.checkpoint_every == 0)
+            if want_ckpt or self._preempt.requested or final_step:
+                self.save(step=s + 1)
+            if self._preempt.requested:
+                break
+        self._start_step = len(self.history) and (self.history[-1]["step"] + 1)
+        return metrics
+
+    def save(self, step: int) -> str:
+        path = ckpt_lib.save_checkpoint(
+            self.run.checkpoint_dir, self.state, step=step, cursor_step=step,
+            seed=self.run.seed,
+            metadata={"model": self.run.model.name,
+                      "shape": self.run.shape.name})
+        ckpt_lib.remove_old_checkpoints(self.run.checkpoint_dir, keep=3)
+        return path

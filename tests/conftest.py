@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here by design — smoke tests and
+benches must see the real 1-CPU device view; only launch/dryrun.py (and the
+subprocess-based mesh tests) force a multi-device platform."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture()
+def np_rng():
+    return np.random.default_rng(0)

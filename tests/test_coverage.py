@@ -1,0 +1,78 @@
+"""LMM coverage model (paper Tables 2/6): CDF structure + invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_config
+from repro.core.coverage import (
+    AGG_UNITS, LMM_SIZES_KB, MulMat, coverage, coverage_cdf,
+    enumerate_lm, enumerate_whisper, fallback_time_fraction, fits)
+
+
+@pytest.fixture(scope="module")
+def whisper_mulmats():
+    return enumerate_whisper(get_config("whisper-tiny"))
+
+
+def test_invocation_scale_matches_paper(whisper_mulmats):
+    """§5.4: tiny has ~477k dot-product invocations for the jfk.wav run.
+    Our enumerator counts row-dot-products; same order of magnitude."""
+    dots = sum(m.dots for m in whisper_mulmats)
+    assert 1e5 < dots < 1e8
+
+
+def test_table2_structure(whisper_mulmats):
+    """Optimized coverage: high (>80%) at 32 KB, 100% by 256 KB.
+    Baseline (padded): far lower at small sizes — the 67x claim's shape."""
+    cdf = dict((s, (b, o)) for s, b, o in coverage_cdf(whisper_mulmats))
+    assert cdf[32][1] > 0.80                 # optimized 32KB covers most
+    assert cdf[256][1] == pytest.approx(1.0)
+    assert cdf[32][0] < cdf[32][1]           # padding strictly hurts
+    assert cdf[8][1] > 0.3                   # small dot products fit early
+
+
+def test_coverage_monotone_in_budget(whisper_mulmats):
+    prev_b = prev_o = -1.0
+    for s, b, o in coverage_cdf(whisper_mulmats):
+        assert b >= prev_b and o >= prev_o
+        prev_b, prev_o = b, o
+
+
+def test_base_small_need_64kb():
+    """Table 6: tiny saturates at 32 KB; base/small only at 64 KB."""
+    tiny = enumerate_whisper(get_config("whisper-tiny"))
+    base = enumerate_whisper(get_config("whisper-base"))
+    small = enumerate_whisper(get_config("whisper-small"))
+    cov = lambda ms, kb: coverage(ms, kb)
+    assert cov(tiny, 32) > 0.8
+    assert cov(base, 32) < cov(tiny, 32)     # the paper's coverage drop
+    assert cov(base, 64) > 0.9               # 64 KB restores >94% (paper)
+    assert cov(small, 64) > 0.9
+    assert cov(small, 32) < 0.8
+
+
+@given(st.integers(1, 2000), st.integers(1, 2000), st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_fits_monotone(m, k, units):
+    mm = MulMat("x", m=m, k=k, n=8)
+    fit_small = fits(mm, 8, agg_units=units)
+    fit_big = fits(mm, 256, agg_units=units)
+    assert fit_big or not fit_small   # fits(8KB) implies fits(256KB)
+
+
+def test_fallback_latency_model_monotone():
+    ms = enumerate_whisper(get_config("whisper-small"))
+    ts = [fallback_time_fraction(ms, kb) for kb in LMM_SIZES_KB]
+    for a, b in zip(ts, ts[1:]):
+        assert b <= a + 1e-12   # more LMM never slower (Fig 11 trend)
+
+
+def test_lm_enumerator_counts():
+    cfg = get_config("phi3-mini-3.8b")
+    ms = enumerate_lm(cfg, seq=128, new_tokens=4, batch=2)
+    assert any(m.name == "vocab" for m in ms)
+    assert any(m.name.startswith("dec.") for m in ms)
+    total_flops = sum(m.flops for m in ms)
+    assert total_flops > 0
+    cfg_moe = get_config("olmoe-1b-7b")
+    ms2 = enumerate_lm(cfg_moe, seq=128)
+    assert any(m.name == "moe.expert" for m in ms2)

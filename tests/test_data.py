@@ -1,0 +1,99 @@
+"""Data pipeline: determinism, resume, host sharding, learnability hooks."""
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_smoke_config
+from repro.data.pipeline import DataCursor, make_stream
+
+SHAPE = ShapeConfig("t", 32, 8, "train")
+
+
+def _stream(arch="phi3-mini-3.8b", **kw):
+    return make_stream(get_smoke_config(arch), SHAPE, vocab_cap=97, **kw)
+
+
+def test_deterministic_replay():
+    s1, s2 = _stream(), _stream()
+    for step in (0, 1, 7, 1000):
+        b1, b2 = s1.batch_at(step), s2.batch_at(step)
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                      np.asarray(b2["tokens"]))
+
+
+def test_steps_differ():
+    s = _stream()
+    a = np.asarray(s.batch_at(0)["tokens"])
+    b = np.asarray(s.batch_at(1)["tokens"])
+    assert not np.array_equal(a, b)
+
+
+def test_resume_equals_continuous():
+    """batch_at is stateless: resuming at step N gives the same stream a
+    continuous run would see — the checkpoint cursor is sufficient state."""
+    s = _stream()
+    run_a = [np.asarray(s.batch_at(i)["tokens"]) for i in range(5)]
+    s2 = _stream()   # "restarted process"
+    run_b = [np.asarray(s2.batch_at(i)["tokens"]) for i in range(3, 5)]
+    np.testing.assert_array_equal(run_a[3], run_b[0])
+    np.testing.assert_array_equal(run_a[4], run_b[1])
+
+
+def test_host_sharding_disjoint_and_complete():
+    full = _stream(num_hosts=1, host_id=0).batch_at(0)
+    parts = [_stream(num_hosts=4, host_id=h).batch_at(0) for h in range(4)]
+    assert all(np.asarray(p["tokens"]).shape[0] == 2 for p in parts)
+    # host slices are pairwise distinct streams
+    flat = [np.asarray(p["tokens"]) for p in parts]
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not np.array_equal(flat[i], flat[j])
+
+
+def test_labels_are_shifted_tokens():
+    b = _stream().batch_at(0)
+    t = np.asarray(b["tokens"])
+    l = np.asarray(b["labels"])
+    np.testing.assert_array_equal(l[:, :-1], t[:, 1:])
+    assert np.all(l[:, -1] == -1)
+
+
+def test_sequences_are_learnable():
+    """Next token is a deterministic function of the current token (affine
+    map mod v) — the convergence signal in examples/train_lm.py is real."""
+    b = _stream().batch_at(0)
+    t = np.asarray(b["tokens"])
+    # within one sequence, equal current tokens always produce the same next
+    row = t[0]
+    seen = {}
+    for cur, nxt in zip(row[:-1], row[1:]):
+        if cur in seen:
+            assert seen[cur] == nxt
+        seen[cur] = nxt
+
+
+def test_whisper_stream_has_mel():
+    s = make_stream(get_smoke_config("whisper-tiny"), SHAPE, vocab_cap=97)
+    b = s.batch_at(0)
+    assert b["mel"].shape == (8, 32, get_smoke_config("whisper-tiny").n_mels)
+    # mel determined by tokens (learnable transcription)
+    b2 = s.batch_at(0)
+    np.testing.assert_array_equal(np.asarray(b["mel"]), np.asarray(b2["mel"]))
+
+
+def test_vlm_stream_has_patches():
+    s = make_stream(get_smoke_config("llava-next-mistral-7b"), SHAPE,
+                    vocab_cap=97)
+    b = s.batch_at(0)
+    assert "patches" in b and b["patches"].ndim == 3
+
+
+def test_cursor():
+    c = DataCursor(step=5, seed=1)
+    assert c.advance(3).step == 8
+    assert c.advance(3).seed == 1
+
+
+def test_global_batch_must_divide_hosts():
+    with pytest.raises(ValueError):
+        make_stream(get_smoke_config("phi3-mini-3.8b"), SHAPE, num_hosts=3)

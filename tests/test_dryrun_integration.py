@@ -1,0 +1,53 @@
+"""Dry-run integration: the real launch path on the real production mesh,
+exercised in a subprocess (the 512-device XLA flag must not leak into this
+test process). One cheap cell per step-kind keeps it fast; the full 40-cell
+matrix runs via ``python -m repro.launch.dryrun --all`` (EXPERIMENTS.md)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+
+def _run_cell(tmp, arch, shape, mesh="pod", timeout=560):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    cp = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh, "--out", tmp],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert cp.returncode == 0, cp.stdout[-2000:] + cp.stderr[-2000:]
+    mesh_dir = "pod_16x16" if mesh == "pod" else "multipod_2x16x16"
+    with open(os.path.join(tmp, mesh_dir, f"{arch}__{shape}.json")) as f:
+        return json.load(f)
+
+
+@pytest.mark.slow
+def test_whisper_train_cell_pod(tmp_path):
+    r = _run_cell(str(tmp_path), "whisper-tiny", "train_4k")
+    assert r["status"] == "ok"
+    rf = r["roofline"]
+    assert rf["flops_per_device"] > 0
+    assert rf["bytes_per_device"] > 0
+    assert rf["bottleneck"] in ("compute", "memory", "collective")
+    assert r["memory"]["temp_bytes"] < 16 * 2**30   # fits v5e HBM
+    assert rf["coll_count"] > 0                     # sharded program
+
+
+@pytest.mark.slow
+def test_whisper_decode_cell_multipod(tmp_path):
+    r = _run_cell(str(tmp_path), "whisper-tiny", "decode_32k",
+                  mesh="multipod")
+    assert r["status"] == "ok"
+    assert r["roofline"]["chips"] == 512            # pod axis engaged
+
+
+@pytest.mark.slow
+def test_long500k_skips_full_attention_arch(tmp_path):
+    r = _run_cell(str(tmp_path), "phi3-mini-3.8b", "long_500k")
+    assert r["status"] == "skip"
+    assert "full-attention" in r["reason"]

@@ -1,0 +1,118 @@
+"""PDP/EDP energy model + burst/LMM experiments vs the paper's figures."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import energy
+from repro.core.amdahl import PAPER_SHARE, amdahl_bound, amdahl_speedup
+from repro.core.bursts import (
+    optimal_burst, paper_burst_sweep, select_tile_burst, tile_sweep_report)
+from repro.core.coverage import MulMat
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1-3
+# ---------------------------------------------------------------------------
+def test_pdp_edp_definitions():
+    assert energy.pdp(2.0, 3.0) == 6.0
+    assert energy.edp(2.0, 3.0) == 12.0
+
+
+def test_pdp_mixed_partition():
+    # 10 s total, 4 s on the accelerator at 2 W, rest on host at 0.5 W
+    v = energy.pdp_mixed(4.0, 10.0, 2.0, 0.5)
+    assert v == pytest.approx(4 * 2 + 6 * 0.5)
+    with pytest.raises(ValueError):
+        energy.pdp_mixed(11.0, 10.0, 2.0)
+
+
+@given(st.floats(0.01, 100), st.floats(0.01, 100))
+@settings(max_examples=30)
+def test_edp_scales_quadratically_with_time(t, p):
+    assert energy.edp(2 * t, p) == pytest.approx(4 * energy.edp(t, p), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Burst sweep (Fig 10)
+# ---------------------------------------------------------------------------
+def test_burst16_is_pdp_and_edp_optimal():
+    """The paper's headline co-design result: burst 16 minimizes both PDP
+    and EDP among {8, 16, 32} under the measured times + synthesized
+    powers."""
+    pts = paper_burst_sweep(lanes=2)
+    assert optimal_burst(pts, "pdp").burst == 16
+    assert optimal_burst(pts, "edp").burst == 16
+
+
+def test_burst_sweep_matches_paper_magnitudes():
+    """§4.4: burst 16 PDP 42.2 J, EDP 1511 J*s; burst 32 is latency-optimal
+    but worse on both energy metrics."""
+    pts = {p.burst: p for p in paper_burst_sweep(lanes=2)}
+    assert pts[16].pdp_j == pytest.approx(42.2, rel=0.15)
+    assert pts[16].edp_js == pytest.approx(1511.0, rel=0.15)
+    assert pts[32].t_main_s < pts[16].t_main_s < pts[8].t_main_s
+    assert pts[32].pdp_j > pts[16].pdp_j
+    assert pts[8].pdp_j > pts[16].pdp_j
+
+
+def test_system_power_matches_paper():
+    """§4.4 lists system powers 1.0967/1.5427/2.4287 W for bursts 8/16/32
+    (2 lanes + ARM idle)."""
+    assert energy.system_power_burst(8) == pytest.approx(1.0967, rel=1e-3)
+    assert energy.system_power_burst(16) == pytest.approx(1.5427, rel=1e-3)
+    assert energy.system_power_burst(32) == pytest.approx(2.4287, rel=1e-3)
+
+
+def test_lmm_power_curve():
+    """Fig 7: 16->32 KB costs only ~10 mW; growth accelerates after 64 KB."""
+    p16 = energy.lmm_power(16)
+    p32 = energy.lmm_power(32)
+    p256 = energy.lmm_power(256)
+    assert p32 - p16 == pytest.approx(0.010, abs=2e-3)
+    assert p256 > p32 * 1.4
+    assert energy.lmm_power(32, "q8_0") > p32   # integer datapath overhead
+
+
+# ---------------------------------------------------------------------------
+# TPU tile-granularity analog
+# ---------------------------------------------------------------------------
+def _mulmats():
+    return [MulMat("a", 128, 384, 512, count=100),
+            MulMat("b", 1, 1500, 384, count=500),
+            MulMat("c", 8, 130, 64, count=50)]
+
+
+def test_tile_sweep_monotone_tradeoffs():
+    pts = tile_sweep_report(_mulmats())
+    by_burst = {p.burst: p for p in pts}
+    # residual stranding never decreases with burst size
+    assert by_burst[512].residual_flop_frac >= by_burst[128].residual_flop_frac
+    # VMEM claim grows with burst
+    assert by_burst[512].vmem_claim_bytes > by_burst[128].vmem_claim_bytes
+    # overhead shrinks with burst
+    assert by_burst[512].grid_overhead < by_burst[128].grid_overhead
+
+
+def test_select_tile_burst_returns_candidate():
+    assert select_tile_burst(_mulmats()) in (128, 256, 512)
+
+
+# ---------------------------------------------------------------------------
+# Amdahl (Fig 4 / §1)
+# ---------------------------------------------------------------------------
+def test_amdahl_paper_bounds():
+    assert amdahl_bound(PAPER_SHARE["fp16"]) == pytest.approx(10.6, abs=0.1)
+    assert amdahl_bound(PAPER_SHARE["q8_0"]) == pytest.approx(7.8, abs=0.1)
+
+
+@given(st.floats(0.0, 0.999), st.floats(1.0, 1e6))
+@settings(max_examples=50)
+def test_amdahl_speedup_bounded(f, s):
+    v = amdahl_speedup(f, s)
+    assert 1.0 <= v <= amdahl_bound(f) + 1e-9
+
+
+def test_amdahl_validation():
+    with pytest.raises(ValueError):
+        amdahl_speedup(1.5, 2.0)
+    with pytest.raises(ValueError):
+        amdahl_speedup(0.5, -1.0)

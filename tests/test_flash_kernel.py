@@ -1,0 +1,65 @@
+"""Pallas flash-attention kernel vs the jnp oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_fwd, vmem_claim_bytes
+
+
+def _ref(q, k, v, causal):
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * q.shape[-1] ** -0.5
+    if causal:
+        qp = jnp.arange(q.shape[1])[:, None]
+        kp = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(kp <= qp, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("bh,sq,sk,d,bq,bk,causal", [
+    (2, 64, 64, 32, 32, 32, True),
+    (1, 128, 128, 64, 64, 64, True),
+    (2, 64, 128, 32, 32, 64, False),
+    (3, 96, 96, 16, 32, 32, True),
+])
+def test_flash_kernel_vs_ref(bh, sq, sk, d, bq, bk, causal):
+    ks = jax.random.split(jax.random.PRNGKey(sq + sk), 3)
+    q = jax.random.normal(ks[0], (bh, sq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (bh, sk, d), jnp.float32)
+    v = jax.random.normal(ks[2], (bh, sk, d), jnp.float32)
+    got = flash_attention_fwd(q, k, v, causal=causal, block_q=bq,
+                              block_k=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(_ref(q, k, v, causal)),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_flash_kernel_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = (jax.random.normal(ks[0], (1, 64, 32)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (1, 64, 32)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (1, 64, 32)) * 0.5).astype(dtype)
+    got = flash_attention_fwd(q, k, v, causal=True, block_q=32, block_k=32,
+                              interpret=True)
+    want = _ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                v.astype(jnp.float32), True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+    assert got.dtype == jnp.float32
+
+
+def test_ragged_rejected():
+    q = jnp.ones((1, 60, 32))
+    with pytest.raises(ValueError):
+        flash_attention_fwd(q, q, q, block_q=32, block_k=32, interpret=True)
+
+
+def test_vmem_claim_monotone():
+    base = vmem_claim_bytes(256, 512, 128)
+    assert vmem_claim_bytes(512, 512, 128) > base
+    assert vmem_claim_bytes(256, 1024, 128) > base
+    # default tiling fits v5e VMEM (~16 MiB) comfortably
+    assert base < 4 * 2**20

@@ -1,0 +1,52 @@
+"""Offload dispatcher: per-invocation decisions, stats, numerical parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.offload import OffloadEngine, OffloadStats
+from repro.core.qformats import quantize_q8_0
+
+
+def test_dispatch_decision_by_budget():
+    eng = OffloadEngine(vmem_budget_kb=1)      # 1 KB budget
+    assert eng.should_offload(m=8, k=32, n=8)          # 512 B activation
+    assert not eng.should_offload(m=1024, k=1024, n=8)  # 2 MB > 1 KB
+
+
+def test_linear_parity_and_stats():
+    eng = OffloadEngine(vmem_budget_kb=8 * 1024, burst=32,
+                        prefer_pallas=True, interpret=True)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 96))
+    w = jax.random.normal(jax.random.PRNGKey(1), (16, 96)) * 0.1
+    y = eng.linear(x, w, name="test")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w.T),
+                               rtol=2e-2, atol=2e-2)
+    assert eng.stats.offloaded_calls == 1
+    assert eng.stats.by_kernel["test"] == 1
+
+
+def test_linear_q8_parity():
+    eng = OffloadEngine(burst=32, prefer_pallas=True, interpret=True)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 64)) * 0.1
+    wq = quantize_q8_0(w)
+    y = eng.linear(x, wq, name="q8")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w.T),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_fallback_accounting():
+    eng = OffloadEngine(vmem_budget_kb=1, burst=32, prefer_pallas=False)
+    x = jnp.ones((512, 512))
+    w = jnp.ones((16, 512))
+    eng.linear(x, w)
+    assert eng.stats.fallback_calls == 1
+    assert eng.stats.offloaded_calls == 0
+    assert eng.stats.offload_rate() == 0.0
+
+
+def test_stats_flop_rates():
+    s = OffloadStats(offloaded_calls=3, fallback_calls=1,
+                     offloaded_flops=300, fallback_flops=100)
+    assert s.offload_rate() == 0.75
+    assert s.offload_flop_rate() == 0.75

@@ -1,0 +1,134 @@
+"""Sharding rules on abstract meshes (no devices needed) + ctx constraints."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs.registry import get_config, get_smoke_config
+from repro.launch import input_specs as IS
+from repro.models import model as M
+from repro.sharding import ctx, rules
+
+POD = AbstractMesh((16, 16), ("data", "model"))
+MULTI = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _specs_by_path(params, mesh):
+    specs = rules.param_specs(params, mesh)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    out = {}
+    for path, spec in flat:
+        out["/".join(str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+                     for k in path)] = spec
+    return out
+
+
+@pytest.fixture(scope="module")
+def qwen_specs():
+    from repro.configs.base import TRAIN_4K
+    cfg = get_config("qwen1.5-110b")
+    params = IS.abstract_params(cfg, TRAIN_4K)
+    return _specs_by_path(params, POD)
+
+
+def test_attention_weight_rules(qwen_specs):
+    s = {k: v for k, v in qwen_specs.items()}
+    qkey = next(k for k in s if k.endswith("attn/q/w"))
+    okey = next(k for k in s if k.endswith("attn/o/w"))
+    assert s[qkey][-2:] == ("model", "data")   # col-parallel + FSDP
+    assert s[okey][-2:] == ("data", "model")   # row-parallel + FSDP
+
+
+def test_ffn_and_head_rules(qwen_specs):
+    s = qwen_specs
+    up = next(k for k in s if k.endswith("up/w") and "stack" in k)
+    down = next(k for k in s if k.endswith("down/w"))
+    head = next(k for k in s if k.endswith("lm_head/w"))
+    assert s[up][-2:] == ("model", "data")
+    assert s[down][-2:] == ("data", "model")
+    assert s[head] == P("model", "data")       # 152064 % 16 == 0
+
+
+def test_indivisible_dims_fall_back():
+    """whisper: vocab 51872 (padded) divides 16; heads 6 do not -> the
+    head-sharded dims must come out None, never an invalid spec."""
+    cfg = get_config("whisper-tiny")
+    from repro.configs.base import TRAIN_4K
+    params = IS.abstract_params(cfg, TRAIN_4K)
+    s = _specs_by_path(params, POD)
+    emb = next(k for k in s if k.endswith("embed/table"))
+    assert s[emb][0] == "model"                # padded vocab shards
+    kproj = next(k for k in s if k.endswith("attn/k/w"))
+    # 6 heads * 64 = 384 divides 16 -> out dim still shards; fine
+    assert s[kproj][0] in ("model", None)
+
+
+def test_moe_expert_rules():
+    cfg = get_config("arctic-480b")
+    from repro.configs.base import TRAIN_4K
+    params = IS.abstract_params(cfg, TRAIN_4K)
+    s = _specs_by_path(params, POD)
+    wup = next(k for k in s if k.endswith("moe/w_up"))
+    wdown = next(k for k in s if k.endswith("moe/w_down"))
+    # (R, E, d, dff): E -> model (EP), d -> data (FSDP)
+    assert s[wup] == P(None, "model", "data")
+    assert s[wdown] == P(None, "model", None, "data")
+
+
+def test_q8_qtensor_inherits_w_rule():
+    from repro.core.qformats import quantize_q8_0
+    params = {"attn": {"q": {"w": quantize_q8_0(jnp.ones((256, 128)))}}}
+    s = rules.param_specs(params, POD)
+    assert s["attn"]["q"]["w"].qs[0] == "model"
+    assert s["attn"]["q"]["w"].scales[0] == "model"
+
+
+def test_batch_specs_pod_and_multipod():
+    batch = {"tokens": jnp.zeros((256, 64), jnp.int32)}
+    s_pod = rules.batch_specs(batch, POD)
+    assert s_pod["tokens"] == P("data")
+    s_multi = rules.batch_specs(batch, MULTI)
+    assert s_multi["tokens"] == P(("pod", "data"))
+    # B=1: falls back to sequence sharding
+    s1 = rules.batch_specs({"tokens": jnp.zeros((1, 64), jnp.int32)}, POD)
+    assert s1["tokens"] == P(None, "data")
+
+
+def test_cache_specs_kv_divisible_vs_not():
+    olmoe = get_smoke_config("olmoe-1b-7b")  # structure only
+    # divisible kv heads: (R,B,S,16,hd) with 16%16==0 -> heads on model
+    kv = {"k": jnp.zeros((2, 128, 64, 16, 8))}
+    s = rules.cache_specs(kv, POD, 16, 8)
+    assert s["k"] == P(None, "data", None, "model")
+    # kv=8 on 16-way model -> S carries the model axis instead
+    kv8 = {"k": jnp.zeros((2, 128, 64, 8, 16))}
+    s8 = rules.cache_specs(kv8, POD, 8, 16)
+    assert s8["k"] == P(None, "data", "model")
+    # B=1 long-context: S takes (data, model)
+    kv1 = {"k": jnp.zeros((2, 1, 512, 8, 16))}
+    s1 = rules.cache_specs(kv1, POD, 8, 16)
+    assert s1["k"] == P(None, None, ("data", "model"))
+
+
+def test_ctx_constrain_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    assert ctx.constrain(x, "batch", None) is x
+
+
+def test_ctx_divisibility_fallback():
+    mesh = AbstractMesh((4, 2), ("data", "model"))
+    with ctx.activation_sharding(mesh):
+        # dims indivisible by the axes -> no constraint failure, still traces
+        def f(x):
+            return ctx.constrain(x, "batch", "model")
+        out = jax.eval_shape(f, jax.ShapeDtypeStruct((6, 3), jnp.float32))
+        assert out.shape == (6, 3)
+
+
+def test_ctx_rank_mismatch_raises():
+    mesh = AbstractMesh((2, 2), ("data", "model"))
+    with ctx.activation_sharding(mesh):
+        with pytest.raises(ValueError):
+            ctx.constrain(jnp.ones((2, 2)), "batch")

@@ -1,0 +1,32 @@
+"""System-level smoke: the public API end-to-end on one architecture —
+init -> train 3 steps -> checkpoint -> serve with Q8_0 offload."""
+import jax
+import numpy as np
+
+from repro.configs.base import OptimizerConfig, RunConfig, ShapeConfig
+from repro.configs.registry import get_smoke_config
+from repro.core.offload import OffloadEngine
+from repro.serve.engine import ServeEngine
+from repro.train.trainer import Trainer
+
+
+def test_train_then_serve_roundtrip(tmp_path):
+    cfg = get_smoke_config("qwen2.5-14b")
+    run = RunConfig(model=cfg, shape=ShapeConfig("t", 32, 4, "train"),
+                    optimizer=OptimizerConfig(lr=1e-3, warmup_steps=1,
+                                              total_steps=10),
+                    steps=3, checkpoint_every=2,
+                    checkpoint_dir=str(tmp_path / "ck"))
+    tr = Trainer(run, vocab_cap=64)
+    metrics = tr.train()
+    assert np.isfinite(metrics["loss"])
+
+    # serve the trained params through the paper's offload path
+    off = OffloadEngine(prefer_pallas=False)
+    eng = ServeEngine(cfg, tr.state.params, max_len=32, quant="q8_0",
+                      offload=off, eos_id=-1)
+    res = eng.generate(np.ones((2, 4), np.int32), max_new=4)
+    assert len(res) == 2 and res[0].steps == 4
+    assert off.stats.offloaded_calls > 0
+    rep = eng.energy_report(res)
+    assert rep["pdp_j"] > 0
