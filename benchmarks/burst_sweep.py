@@ -1,5 +1,11 @@
 """Paper Fig 10 / §4.4: burst-length sensitivity (PDP/EDP) + the TPU
-tile-granularity analog sweep."""
+tile-granularity analog sweep.
+Usage:
+  PYTHONPATH=src python -m benchmarks.burst_sweep
+
+No flags; prints the Fig 10 PDP/EDP table against the paper's numbers and
+the block_k tile-analog sweep, and writes experiments/bench/burst_sweep.json.
+"""
 from __future__ import annotations
 
 from benchmarks.common import fmt_table, save

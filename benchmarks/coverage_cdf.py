@@ -2,7 +2,14 @@
 
 Table 2 (tiny, baseline padded vs optimized dense) and Table 6 (coverage vs
 LMM size for tiny/base/small) from our invocation enumerator + documented
-footprint model (core/coverage.py)."""
+footprint model (core/coverage.py).
+Usage:
+  PYTHONPATH=src python -m benchmarks.coverage_cdf
+
+No flags; prints Table 2 (baseline vs optimized, tiny) and Table 6
+(tiny/base/small vs LMM size) and writes
+experiments/bench/coverage_cdf.json.
+"""
 from __future__ import annotations
 
 from benchmarks.common import fmt_table, save

@@ -15,7 +15,13 @@ TPU): 2 lanes at 840 MHz with 22 (FP16, 2-way SIMD FMA) / 46 (Q8_0, packed
 int8 MAC with dequant overhead) active PEs; DMA at LPDDR4-class effective
 bandwidth. The dequant factor and DMA bandwidth are fitted (the paper does
 not publish them); the validation target is the regime (compute-bound) and
-the direction (Q8_0 EXEC share > FP16), not the exact percentages."""
+the direction (Q8_0 EXEC share > FP16), not the exact percentages.
+Usage:
+  PYTHONPATH=src python -m benchmarks.exec_breakdown
+
+No flags; prints the per-kernel-class EXEC/LOAD/CONF decomposition and
+writes experiments/bench/exec_breakdown.json.
+"""
 from __future__ import annotations
 
 from benchmarks.common import fmt_table, save

@@ -2,7 +2,13 @@
 fallback model, for tiny/base/small x {fp16, q8_0}.
 
 T(budget) = T_host x [uncovered + covered/accel_speedup]; anchored to the
-paper's measured host-only times so absolute seconds are comparable."""
+paper's measured host-only times so absolute seconds are comparable.
+Usage:
+  PYTHONPATH=src python -m benchmarks.lmm_latency
+
+No flags; prints projected E2E latency vs LMM size for tiny/base/small x
+{fp16, q8_0} and writes experiments/bench/lmm_latency.json.
+"""
 from __future__ import annotations
 
 from benchmarks.common import fmt_table, save

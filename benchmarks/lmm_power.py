@@ -1,5 +1,11 @@
 """Paper Fig 7: synthesized power vs LMM size (FP16 and Q8_0 paths), and the
-PDP-optimality argument for the 32 KB operating point."""
+PDP-optimality argument for the 32 KB operating point.
+Usage:
+  PYTHONPATH=src python -m benchmarks.lmm_power
+
+No flags; prints the Fig 7 power-vs-LMM table with coverage context and
+writes experiments/bench/lmm_power.json.
+"""
 from __future__ import annotations
 
 from benchmarks.common import fmt_table, save

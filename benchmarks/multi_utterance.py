@@ -4,7 +4,15 @@ The paper decodes 21 LibriSpeech utterances on CPU vs IMAX and reports a
 0.00-0.13 % transcript delta. Our analog: N synthetic utterances of varying
 length through the FULL whisper-tiny config, greedy-decoded twice — dense
 bf16 XLA path (the "CPU" reference) vs Q8_0 + offload dispatcher (the
-"IMAX" path) — reporting per-utterance latency and token agreement."""
+"IMAX" path) — reporting per-utterance latency and token agreement.
+Usage:
+  PYTHONPATH=src python -m benchmarks.multi_utterance
+
+No CLI flags; ``run(n_utts=5, max_new=8)`` is parameterized for callers
+(benchmarks.run uses the defaults). Wall-clock heavy: decodes the full
+whisper-tiny config twice per utterance. Writes
+experiments/bench/multi_utterance.json.
+"""
 from __future__ import annotations
 
 import jax

@@ -4,7 +4,14 @@ extended with our TPU-v5e projection (beyond-paper column).
 IMAX/Jetson/RTX rows reproduce the paper's arithmetic from its own measured
 latencies and power constants (Eq. 1). The TPU row projects whisper-tiny
 decode from the roofline model: weights-bound decode time x TDP-class chip
-power — the *same* normalized methodology the paper defends in §4.1."""
+power — the *same* normalized methodology the paper defends in §4.1.
+Usage:
+  PYTHONPATH=src python -m benchmarks.pdp_cross_platform
+
+No flags; prints the Fig 9 PDP table (IMAX/Jetson/RTX rows from paper
+constants, TPU row from the roofline projection) and writes
+experiments/bench/pdp_cross_platform.json.
+"""
 from __future__ import annotations
 
 from benchmarks.common import fmt_table, save

@@ -5,7 +5,14 @@ and with every *weight* GEMM replaced by an O(1) stand-in — and attribute
 the difference to the dot-product kernel, mirroring the paper's per-op
 profile. Attention score/AV einsums (also mul_mat in ggml terms) stay in
 both runs, so our measured share is a LOWER bound on the paper's 87-91 %.
-The Amdahl bounds are recomputed from the paper's own shares exactly."""
+The Amdahl bounds are recomputed from the paper's own shares exactly.
+Usage:
+  PYTHONPATH=src python -m benchmarks.profile_shares
+
+No CLI flags; ``run(n_frames=384, n_tokens=16)`` is parameterized for
+callers. Wall-clock heavy: runs the full whisper-tiny config twice on CPU.
+Writes experiments/bench/profile_shares.json.
+"""
 from __future__ import annotations
 
 import jax

@@ -7,7 +7,13 @@ We quantize every 2-D GEMM weight of our whisper-tiny (randomly initialized
 at trained-weight scale) with the same GGML block format and report the same
 four metrics — the match validates the format implementation, with the
 residual gap attributable to weight-distribution differences (init vs
-trained)."""
+trained).
+Usage:
+  PYTHONPATH=src python -m benchmarks.q8_reconstruction
+
+No flags; prints MAE/RMSE/max|err|/rel-L2 against the paper's published
+figures and writes experiments/bench/q8_reconstruction.json.
+"""
 from __future__ import annotations
 
 import jax

@@ -1,7 +1,16 @@
-"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the JSON
-records under experiments/dryrun/.
+"""Benchmark reporting: the EXPERIMENTS.md §Dry-run / §Roofline tables from
+the JSON records under experiments/dryrun/, plus the paper-figure index of
+every benchmark script (DESIGN.md §8).
 
-  PYTHONPATH=src python -m benchmarks.report [--mesh pod_16x16]
+Usage:
+  PYTHONPATH=src python -m benchmarks.report [--mesh pod_16x16] [--variant V]
+  PYTHONPATH=src python -m benchmarks.report --index
+
+Flags:
+  --mesh M     dry-run mesh directory to tabulate (default pod_16x16).
+  --variant V  record variant filter (default "").
+  --index      print the benchmark-script <-> paper-figure index with the
+               output status of each script's experiments/bench/*.json.
 """
 from __future__ import annotations
 
@@ -13,6 +22,35 @@ from typing import Dict, List
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DRYRUN_DIR = os.path.join(ROOT, "experiments", "dryrun")
+BENCH_DIR = os.path.join(ROOT, "experiments", "bench")
+
+# One row per benchmark module: (module, paper figure/table, what it shows).
+# Kept in DESIGN.md §8 order; tests assert every benchmarks/*.py script with
+# a run() entry point appears here.
+BENCHMARK_INDEX = [
+    ("profile_shares", "Fig 4 / §1",
+     "dot-product runtime share + Amdahl bound"),
+    ("q8_reconstruction", "§4.2", "Q8_0 reconstruction error vs paper"),
+    ("coverage_cdf", "Table 2 + 6", "LMM coverage CDFs"),
+    ("lmm_power", "Fig 7", "power vs LMM size; 32KB PDP argument"),
+    ("burst_sweep", "Fig 10 / §4.4", "burst PDP/EDP sweep + tile analog"),
+    ("tune_sweep", "Fig 7+10", "(vmem_budget x block_k) autotuning grid"),
+    ("lmm_latency", "Fig 11 / §5.1", "LMM size -> projected E2E latency"),
+    ("exec_breakdown", "Fig 12", "EXEC/LOAD/CONF decomposition"),
+    ("pdp_cross_platform", "Fig 9", "TDP-normalized cross-platform PDP"),
+    ("multi_utterance", "Table 4/5",
+     "multi-utterance latency + transcript agreement"),
+]
+
+
+def index_table() -> str:
+    rows = ["| script | reproduces | shows | output |",
+            "|---|---|---|---|"]
+    for mod, fig, what in BENCHMARK_INDEX:
+        out = os.path.join(BENCH_DIR, f"{mod}.json")
+        status = "ok" if os.path.exists(out) else "not run"
+        rows.append(f"| benchmarks/{mod}.py | {fig} | {what} | {status} |")
+    return "\n".join(rows)
 
 ARCH_ORDER = ["llava-next-mistral-7b", "jamba-v0.1-52b", "mamba2-780m",
               "phi3-mini-3.8b", "qwen1.5-110b", "internlm2-20b",
@@ -87,7 +125,12 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="pod_16x16")
     ap.add_argument("--variant", default="")
+    ap.add_argument("--index", action="store_true",
+                    help="print the benchmark <-> paper-figure index")
     args = ap.parse_args(argv)
+    if args.index:
+        print(index_table())
+        return
     print(roofline_table(args.mesh, args.variant))
     print()
     print(json.dumps(summary(args.mesh, args.variant), indent=1))

@@ -12,12 +12,14 @@ import traceback
 
 from benchmarks import (
     burst_sweep, coverage_cdf, exec_breakdown, lmm_latency, lmm_power,
-    multi_utterance, pdp_cross_platform, profile_shares, q8_reconstruction)
+    multi_utterance, pdp_cross_platform, profile_shares, q8_reconstruction,
+    tune_sweep)
 
 SUITES = [
     ("q8_reconstruction (§4.2)", q8_reconstruction.run, False),
     ("coverage_cdf (Table 2/6)", coverage_cdf.run, False),
     ("burst_sweep (Fig 10)", burst_sweep.run, False),
+    ("tune_sweep (Fig 7+10 co-design grid)", tune_sweep.run, False),
     ("lmm_power (Fig 7)", lmm_power.run, False),
     ("lmm_latency (Fig 11)", lmm_latency.run, False),
     ("pdp_cross_platform (Fig 9)", pdp_cross_platform.run, False),

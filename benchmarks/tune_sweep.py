@@ -1,0 +1,174 @@
+"""Paper §4.4/§5.4 (Fig 7 + Fig 10 jointly): the LMM-size x burst-length
+co-design sweep as a TPU (vmem_budget x block_k) autotuning grid, plus a
+tuned-vs-default comparison for the Whisper-tiny GEMM shapes (d=384,
+d_ff=1536).
+
+For every (VMEM budget, block_k) cell the autotuner's candidate space is
+searched for the cheapest admissible (block_m, block_n) completion; the
+cell reports cost plus PDP/EDP proxies where the power term scales with the
+budget (the Fig 7 local-memory power trend, DESIGN.md §9.5). Cells where no
+tiling fits the budget print "-" — Table 6's coverage cliff.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.tune_sweep [--measure] [--iters N]
+      [--save-cache PATH]
+
+Flags:
+  --measure          wall-clock the winning candidates through the real
+                     kernels (interpret mode off-TPU; slow) instead of the
+                     deterministic analytic roofline model.
+  --iters N          timing iterations per measured cell (default 3).
+  --save-cache PATH  persist the tuned winners as a JSON tuning cache
+                     consumable by core.offload.OffloadEngine.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import fmt_table, save
+from repro.core import energy
+from repro.kernels.ops import _largest_tile
+from repro.tuning import (
+    VMEM_FULL_BYTES, Autotuner, analytic_cost, budget_grid, measured_cost,
+    padded_m, sweep_grid)
+from repro.tuning.space import BLOCK_K_CANDIDATES, TileCandidate
+
+# Whisper-tiny's dominant GEMM classes (paper Table 1: d=384, d_ff=1536;
+# 1500 encoder frames pad to 1504, decode batch pads to 8).
+TINY_SHAPES = [
+    # (name, kernel, M, N, K)
+    ("enc.attn.qkv", "q8_matmul", padded_m(1500), 1152, 384),
+    ("enc.ffn.up", "q8_matmul", padded_m(1500), 1536, 384),
+    ("enc.ffn.down", "q8_matmul", padded_m(1500), 384, 1536),
+    ("dec.ffn.up", "q8_matvec", 8, 1536, 384),
+    ("dec.ffn.down", "q8_matvec", 8, 384, 1536),
+    ("enc.ffn.up.bf16", "bf16_matmul", padded_m(1500), 1536, 384),
+]
+
+# Budget axis: 16 KB (the paper's smallest LMM point) -> full per-core
+# VMEM. agg_units=1: one TPU core's VMEM, no PE aggregation (DESIGN.md §6.1).
+BUDGETS = budget_grid(min_kb=16, agg_units=1)
+assert BUDGETS[-1] == VMEM_FULL_BYTES
+
+
+def _vmem_power_w(budget_bytes: int) -> float:
+    """Fig 7 analog: the chip-power share attributed to the claimed local
+    memory grows mildly with the budget (16->256 KB costs IMAX ~60%/lane;
+    we apply a gentler 20% swing across the whole VMEM range)."""
+    return energy.TPU_V5E_W * (0.8 + 0.2 * budget_bytes / VMEM_FULL_BYTES)
+
+
+def _default_candidate(kernel: str, m: int, n: int, k: int) -> TileCandidate:
+    """The hard-coded tiling ops.py would pick with no tuner attached."""
+    from repro.kernels.bf16_matmul import vmem_claim_bytes as bf16_claim
+    from repro.kernels.q8_matmul import vmem_claim_bytes as q8mm_claim
+    from repro.kernels.q8_matvec import vmem_claim_bytes as q8mv_claim
+    if kernel == "q8_matvec":
+        bn = _largest_tile(n, 512)
+        return TileCandidate(kernel, m, bn, k,
+                             q8mv_claim(b=m, k=k, block_n=bn))
+    bm = _largest_tile(m, 128)
+    bn = _largest_tile(n, 256)
+    bk = _largest_tile(k, 256, mult=32 if kernel.startswith("q8") else 1)
+    claim = q8mm_claim if kernel == "q8_matmul" else bf16_claim
+    return TileCandidate(kernel, bm, bn, bk,
+                         claim(block_m=bm, block_n=bn, block_k=bk))
+
+
+def _cost(cand, m, n, k, measure: bool, iters: int):
+    if measure:
+        return measured_cost(cand, m, n, k, iters=iters)
+    return analytic_cost(cand, m, n, k)
+
+
+def run(measure: bool = False, iters: int = 3,
+        save_cache: str | None = None) -> dict:
+    mode = "measured" if measure else "analytic"
+    name, kernel, m, n, k = ("enc.ffn.down", "q8_matmul",
+                             padded_m(1500), 384, 1536)
+    block_ks = [b for b in BLOCK_K_CANDIDATES if k % b == 0]
+
+    # --- the (vmem_budget x block_k) grid for the headline shape ---------
+    cost_fn = ((lambda c, cm, cn, ck: measured_cost(c, cm, cn, ck,
+                                                    iters=iters))
+               if measure else analytic_cost)
+    cells = sweep_grid(kernel, m, n, k, budgets=BUDGETS,
+                       block_ks=block_ks, cost_fn=cost_fn)
+    by_cell = {(b, r.cand.block_k): r for b, r in cells}
+    grid_rows, grid_cells = [], []
+    for budget in BUDGETS:
+        row = [f"{budget//1024}KB" if budget < 2**20
+               else f"{budget/2**20:.0f}MB"]
+        for bk in block_ks:
+            best = by_cell.get((budget, bk))
+            if best is None:
+                row.append("-")
+                continue
+            p = _vmem_power_w(budget)
+            grid_cells.append({
+                "budget_bytes": budget, "block_k": bk,
+                "cost_s": best.cost_s, "pdp_j": best.pdp_j(p),
+                "edp_js": best.edp_js(p), "source": best.source,
+                "tiling": best.cand.as_kwargs()})
+            row.append(f"{best.pdp_j(p)*1e6:.2f}")
+        grid_rows.append(row)
+    print(f"(vmem_budget x block_k) PDP grid [uJ, {mode}] — "
+          f"{name} (M={m}, N={n}, K={k})")
+    print(fmt_table(grid_rows, ["budget", *(f"bk={b}" for b in block_ks)]))
+    best_cell = min(grid_cells, key=lambda c: c["pdp_j"])
+    print(f"PDP-optimal cell: budget="
+          f"{best_cell['budget_bytes']//1024}KB block_k="
+          f"{best_cell['block_k']} (paper: 32KB LMM, burst 16)")
+
+    # --- tuned vs hard-coded defaults over the tiny shape set ------------
+    tuner = Autotuner(vmem_budget_bytes=VMEM_FULL_BYTES // 2,
+                      mode=mode, cache_path=save_cache)
+    cmp_rows, comparisons = [], []
+    for sname, skern, sm, sn, sk in TINY_SHAPES:
+        dtype = "q8_0" if skern.startswith("q8") else "bf16"
+        rec = tuner.best_tiling(skern, sm, sn, sk, dtype)
+        dflt = _default_candidate(skern, sm, sn, sk)
+        dcost = _cost(dflt, sm, sn, sk, measure, iters).cost_s
+        tcost = rec.cost_s if rec else dcost
+        tiling = (f"({rec.block_m},{rec.block_n},{rec.block_k})"
+                  if rec else "default")
+        cmp_rows.append([sname, skern, f"{sm}x{sn}x{sk}", tiling,
+                         f"{tcost*1e6:.2f}", f"{dcost*1e6:.2f}",
+                         f"{dcost/tcost:.2f}x" if tcost else "-"])
+        comparisons.append({"name": sname, "kernel": skern,
+                            "shape": [sm, sn, sk],
+                            "tuned_cost_s": tcost, "default_cost_s": dcost,
+                            "tuned": rec.tiling() if rec else None})
+    print(f"\ntuned vs hard-coded defaults [{mode} cost, us] — "
+          "whisper-tiny shapes")
+    print(fmt_table(cmp_rows, ["class", "kernel", "MxNxK", "tuned tiling",
+                               "tuned", "default", "speedup"]))
+    regressions = [c for c in comparisons
+                   if c["tuned_cost_s"] > c["default_cost_s"] * 1.001]
+    print(f"tuned beats-or-matches default on "
+          f"{len(comparisons)-len(regressions)}/{len(comparisons)} shapes")
+
+    if save_cache:
+        print(f"tuning cache saved to {tuner.save()} "
+              f"({len(tuner.cache)} entries)")
+    out = {"mode": mode, "grid_shape": {"name": name, "m": m, "n": n, "k": k},
+           "grid": grid_cells, "pdp_optimal": best_cell,
+           "comparisons": comparisons,
+           "tuned_never_worse": not regressions}
+    save("tune_sweep", out)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--measure", action="store_true",
+                    help="wall-clock the kernels instead of analytic cost")
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--save-cache", default=None,
+                    help="path to persist the JSON tuning cache")
+    args = ap.parse_args(argv)
+    run(measure=args.measure, iters=args.iters, save_cache=args.save_cache)
+
+
+if __name__ == "__main__":
+    main()

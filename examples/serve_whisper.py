@@ -12,6 +12,7 @@ offload dispatcher: main segments on the (interpret-mode) Pallas kernels,
 residuals on the host path, with coverage-based fallback.
 """
 import argparse
+import os
 import time
 
 import jax
@@ -22,6 +23,7 @@ from repro.core import energy
 from repro.core.offload import OffloadEngine
 from repro.models import model as model_lib
 from repro.serve.engine import ServeEngine
+from repro.tuning import Autotuner
 
 
 def main(argv=None):
@@ -44,8 +46,14 @@ def main(argv=None):
     print(f"init {time.time()-t0:.1f}s")
 
     quant = "none" if args.dense else "q8_0"
+    # Autotuned dispatch (DESIGN.md §9): ServeEngine pre-tunes the whisper
+    # GEMM shapes at construction and persists winners for later runs.
+    tuner = Autotuner(cache_path=os.path.join("experiments", "tuning",
+                                              "whisper_tiny.json"),
+                      mode="analytic")
     offload = OffloadEngine(vmem_budget_kb=8 * 1024, burst=128,
-                            prefer_pallas=False)  # XLA path of same math
+                            prefer_pallas=False,  # XLA path of same math
+                            tuner=tuner)
     engine = ServeEngine(cfg, params, max_len=args.max_new + 8,
                          quant=quant, offload=offload, eos_id=-1)
 

@@ -93,6 +93,20 @@ def mixed_matmul_q8(x: jnp.ndarray,
     return out
 
 
+def select_burst(k: int, tuner=None, *, kernel: str = "q8_matmul",
+                 m: int = 1, n: int = 1, dtype: str = "q8_0",
+                 default: int = 256) -> int:
+    """Pick the split granularity for a (M,K)x(N,K) invocation: the tuned
+    ``block_k`` (the burst-length analog, DESIGN.md §9.4) when an autotuner
+    is attached and an admissible tiling exists for the full-K problem, else
+    ``default``. The tuned value always satisfies the whole-Q8_0-block rule
+    because the candidate space enforces it."""
+    if tuner is None:
+        return default
+    rec = tuner.best_tiling(kernel, m, n, k, dtype)
+    return rec.block_k if rec else default
+
+
 def residual_fraction(length: int, burst: int) -> float:
     """Fraction of work left on the host path (paper §3.2's three-way
     trade-off: larger bursts raise this for non-aligned lengths)."""

@@ -20,9 +20,10 @@ import jax
 import numpy as np
 
 from repro.core.coverage import MulMat, fits
-from repro.core.mixed_exec import split_aligned
+from repro.core.mixed_exec import select_burst, split_aligned
 from repro.core.qformats import QTensor
 from repro.kernels import ops
+from repro.tuning import Autotuner, kernel_for, padded_m
 
 
 @dataclass
@@ -33,6 +34,7 @@ class OffloadStats:
     offloaded_flops: int = 0
     fallback_flops: int = 0
     residual_flops: int = 0
+    tuned_calls: int = 0        # offloads that ran on a tuned tiling
     by_kernel: Dict[str, int] = field(default_factory=dict)
 
     def offload_rate(self) -> float:
@@ -48,16 +50,32 @@ class OffloadStats:
 class OffloadEngine:
     """The dispatcher. ``vmem_budget_kb`` is the LMM-size analog (per-core
     VMEM claim allowed for one invocation's working set; agg_units=1 on TPU);
-    ``burst`` is the lane granularity from the burst sweep."""
+    ``burst`` is the lane granularity from the burst sweep — the *untuned*
+    fallback when no ``tuner`` is attached. With a ``tuner``
+    (tuning.Autotuner), both the split granularity and the kernel tile
+    shapes come from the persistent tuning cache (DESIGN.md §9.4): a cache
+    hit is a dict lookup, so steady-state dispatch stays cheap."""
     vmem_budget_kb: int = 8 * 1024      # half of v5e's ~16 MiB VMEM
     burst: int = 256
     prefer_pallas: Optional[bool] = None
     interpret: Optional[bool] = None
+    tuner: Optional[Autotuner] = None
     stats: OffloadStats = field(default_factory=OffloadStats)
 
     def should_offload(self, m: int, k: int, n: int, name: str = "linear") -> bool:
         mm = MulMat(name, m=m, k=k, n=n)
         return fits(mm, self.vmem_budget_kb, optimized=True, agg_units=1)
+
+    def _select_burst(self, m: int, k: int, n: int, quantized: bool):
+        """(burst, tuned?) for this invocation class; engine default when
+        untuned or nothing admissible under the tuner's VMEM budget."""
+        if self.tuner is None:
+            return self.burst, False
+        kern = kernel_for(m, quantized)
+        dtype = "q8_0" if quantized else "bf16"
+        burst = select_burst(k, self.tuner, kernel=kern, m=padded_m(m), n=n,
+                             dtype=dtype, default=0)
+        return (burst, True) if burst else (self.burst, False)
 
     def linear(self, x: jax.Array, w, name: str = "linear") -> jax.Array:
         """y = x @ W^T with per-invocation offload decision + accounting."""
@@ -65,18 +83,23 @@ class OffloadEngine:
         n = w.shape[0] if not isinstance(w, QTensor) else w.shape[0]
         m = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
         flops = 2 * m * k * n
-        k_main, k_res = split_aligned(k, self.burst)
+        quantized = isinstance(w, QTensor)
+        burst, tuned = self._select_burst(m, k, n, quantized)
+        k_main, k_res = split_aligned(k, burst)
         offload = self.should_offload(m, k, n, name)
         if offload:
             self.stats.offloaded_calls += 1
+            if tuned:
+                self.stats.tuned_calls += 1
             self.stats.offloaded_flops += flops * k_main // max(k, 1)
             self.stats.residual_flops += flops * k_res // max(k, 1)
-            y = ops.matmul(x, w, burst=self.burst,
+            y = ops.matmul(x, w, burst=burst,
                            prefer_pallas=self.prefer_pallas,
-                           interpret=self.interpret)
+                           interpret=self.interpret,
+                           tuner=self.tuner)
         else:
             self.stats.fallback_calls += 1
             self.stats.fallback_flops += flops
-            y = ops.matmul(x, w, burst=self.burst, prefer_pallas=False)
+            y = ops.matmul(x, w, burst=burst, prefer_pallas=False)
         self.stats.by_kernel[name] = self.stats.by_kernel.get(name, 0) + 1
         return y

@@ -15,9 +15,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 DEFAULT_BLOCK_M = 128
 DEFAULT_BLOCK_N = 256
 DEFAULT_BLOCK_K = 256
+
+
+def vmem_claim_bytes(block_m: int = DEFAULT_BLOCK_M,
+                     block_n: int = DEFAULT_BLOCK_N,
+                     block_k: int = DEFAULT_BLOCK_K,
+                     x_bytes: int = 2) -> int:
+    """VMEM working set of one grid step (the LMM-sizing analog used by the
+    autotuner, DESIGN.md §9.1): double-buffered bf16 x/w tiles + f32
+    accumulator scratch + out tile."""
+    db = 2  # pallas pipeline double-buffers inputs
+    return (db * (block_m * block_k * x_bytes       # x tile
+                  + block_n * block_k * 2)          # bf16 weight tile
+            + block_m * block_n * 4                 # accumulator scratch
+            + block_m * block_n * 4)                # out tile
 
 
 def _bf16_matmul_kernel(x_ref, w_ref, o_ref, acc_ref):
@@ -68,6 +84,6 @@ def bf16_matmul(x: jax.Array, w: jax.Array, *,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(x, w)

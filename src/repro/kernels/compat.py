@@ -1,0 +1,12 @@
+"""Pallas-TPU API shims across jax versions.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in newer
+jax releases; the kernels target the new name and this shim keeps them
+running on the older toolchain baked into CI containers.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

@@ -46,35 +46,54 @@ def _pad_m(x: jax.Array, mult: int = _SUBLANE):
     return x, m
 
 
+def _tuned(tuner, kernel: str, m: int, n: int, k: int, dtype: str):
+    """Winning tiling for the *main-segment* shape, or None (tuner absent or
+    nothing admissible under its VMEM budget)."""
+    if tuner is None:
+        return None
+    return tuner.best_tiling(kernel, m, n, k, dtype)
+
+
 def _pallas_q8_main(x2d: jax.Array, wq: QTensor, interpret: bool,
-                    block_k: int) -> jax.Array:
+                    block_k: int, tuner=None) -> jax.Array:
     """Aligned-segment Q8_0 path: matvec variant for skinny M, tiled matmul
-    otherwise. Handles M/N padding so the kernel only sees full tiles."""
+    otherwise. Handles M/N padding so the kernel only sees full tiles.
+    With a tuner attached, tile shapes come from the tuning cache instead of
+    the module-level defaults (DESIGN.md §9.4)."""
     qs2d = wq.flat_qs()
     n, k = qs2d.shape
     xp, m = _pad_m(x2d)
     mp = xp.shape[0]
     if mp <= 2 * _SUBLANE:
+        rec = _tuned(tuner, "q8_matvec", mp, n, k, "q8_0")
         # decode: N tiled at 512 when divisible, else largest divisor tile
-        bn = _largest_tile(n, 512)
+        bn = rec.block_n if rec else _largest_tile(n, 512)
         out = q8_matvec(xp, qs2d, wq.scales, block_n=bn, interpret=interpret)
     else:
-        bm = _largest_tile(mp, 128)
-        bn = _largest_tile(n, 256)
-        bk = _largest_tile(k, block_k, mult=QBLOCK)
+        rec = _tuned(tuner, "q8_matmul", mp, n, k, "q8_0")
+        if rec:
+            bm, bn, bk = rec.block_m, rec.block_n, rec.block_k
+        else:
+            bm = _largest_tile(mp, 128)
+            bn = _largest_tile(n, 256)
+            bk = _largest_tile(k, block_k, mult=QBLOCK)
         out = q8_matmul(xp, qs2d, wq.scales, block_m=bm, block_n=bn,
                         block_k=bk, interpret=interpret)
     return out[:m]
 
 
 def _pallas_bf16_main(x2d: jax.Array, w: jax.Array, interpret: bool,
-                      block_k: int) -> jax.Array:
+                      block_k: int, tuner=None) -> jax.Array:
     xp, m = _pad_m(x2d)
     mp = xp.shape[0]
     n, k = w.shape
-    bm = _largest_tile(mp, 128)
-    bn = _largest_tile(n, 256)
-    bk = _largest_tile(k, block_k)
+    rec = _tuned(tuner, "bf16_matmul", mp, n, k, "bf16")
+    if rec:
+        bm, bn, bk = rec.block_m, rec.block_n, rec.block_k
+    else:
+        bm = _largest_tile(mp, 128)
+        bn = _largest_tile(n, 256)
+        bk = _largest_tile(k, block_k)
     return bf16_matmul(xp, w, block_m=bm, block_n=bn, block_k=bk,
                        interpret=interpret)[:m]
 
@@ -91,11 +110,14 @@ def matmul(x: jax.Array, w: Weight, *,
            burst: int = 256,
            prefer_pallas: Optional[bool] = None,
            interpret: Optional[bool] = None,
-           block_k: int = 256) -> jax.Array:
+           block_k: int = 256,
+           tuner=None) -> jax.Array:
     """y = x @ W^T for dense or Q8_0 weights, via the paper's mixed-execution
     split. x: (..., K); W: (N, K) array or QTensor. Returns (..., N) f32.
 
     prefer_pallas=None -> pallas on TPU, XLA elsewhere (dry-run lowers XLA).
+    ``tuner`` (a tuning.Autotuner) overrides the default tile shapes with
+    cached winners; ``burst``/``block_k`` remain the untuned fallbacks.
     """
     if prefer_pallas is None:
         prefer_pallas = _on_tpu()
@@ -106,14 +128,14 @@ def matmul(x: jax.Array, w: Weight, *,
     if isinstance(w, QTensor):
         if prefer_pallas:
             main = functools.partial(_pallas_q8_main, interpret=interpret,
-                                     block_k=block_k)
+                                     block_k=block_k, tuner=tuner)
             out = mixed_matmul_q8(x2d, w, burst, main)
         else:
             out = mixed_matmul_q8(x2d, w, burst, ref.q8_matmul_ref)
     else:
         if prefer_pallas:
             main = functools.partial(_pallas_bf16_main, interpret=interpret,
-                                     block_k=block_k)
+                                     block_k=block_k, tuner=tuner)
             out = mixed_matmul(x2d, w, burst, main)
         else:
             out = mixed_matmul(x2d, w, burst, ref.matmul_bf16_ref)

@@ -20,9 +20,24 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 from repro.core.qformats import QBLOCK
 
 DEFAULT_BLOCK_N = 512
+
+
+def vmem_claim_bytes(b: int = 8, k: int = 384,
+                     block_n: int = DEFAULT_BLOCK_N,
+                     x_bytes: int = 2) -> int:
+    """VMEM working set of one grid step (autotuner input, DESIGN.md §9.1):
+    the whole (B, K) activation stays resident across the N sweep; the int8
+    payload + scales tiles double-buffer; the out tile is written per step."""
+    db = 2
+    return (b * k * x_bytes                          # resident activation
+            + db * (block_n * k                      # int8 payload tile
+                    + block_n * (k // QBLOCK) * 4)   # scales tile
+            + b * block_n * 4)                       # out tile
 
 
 def _q8_matvec_kernel(x_ref, q_ref, s_ref, o_ref):
@@ -61,6 +76,6 @@ def q8_matvec(x: jax.Array, qs: jax.Array, scales: jax.Array, *,
         out_specs=pl.BlockSpec((b, block_n), lambda j: (0, j)),
         out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
     )(x, qs, scales)

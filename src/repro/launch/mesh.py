@@ -11,14 +11,34 @@ Mesh shapes (assignment):
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                   # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:                    # older toolchains: no explicit axis
+    AxisType = None                    # types; make_mesh defaults are fine
+
+
+def _make_mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def abstract_mesh(shape, axes):
+    """AbstractMesh across jax versions: new-style (sizes, names) signature
+    vs the old single shape_tuple of (name, size) pairs."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_smoke_mesh(devices=None):
@@ -31,5 +51,4 @@ def make_smoke_mesh(devices=None):
         shape, axes = (2, 2), ("data", "model")
     else:
         shape, axes = (1, 1), ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)

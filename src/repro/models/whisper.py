@@ -31,6 +31,26 @@ class WhisperDecodeState(NamedTuple):
     cross_kv: Tuple[jax.Array, jax.Array]  # (R, B, F, Hkv, hd) x2, fixed
 
 
+def warm_tuning(cfg: ModelConfig, engine, *, n_frames: int = 1500,
+                n_tokens: int = 27, batch: int = 1,
+                quant: Optional[str] = None) -> int:
+    """Pre-tune every GEMM shape of one Whisper inference (the coverage
+    enumerator's invocation classes, batch-scaled) so the first utterance
+    never stalls on an autotuning sweep — the offline analog of the paper
+    choosing its LMM/burst point before synthesis (DESIGN.md §9.4).
+    ``quant`` is the *serving* quantization (ServeEngine may override
+    cfg.quant); it selects which kernel family's keys get warmed. Returns
+    the number of distinct shapes tuned; 0 if the engine carries no tuner."""
+    if engine is None or getattr(engine, "tuner", None) is None:
+        return 0
+    from repro.core.coverage import MulMat, enumerate_whisper
+    q = quant if quant is not None else cfg.quant
+    dtype = "q8_0" if q == "q8_0" else "bf16"
+    mulmats = [MulMat(m.name, m=m.m * batch, k=m.k, n=m.n)
+               for m in enumerate_whisper(cfg, n_frames, n_tokens)]
+    return engine.tuner.warm(mulmats, dtype=dtype)
+
+
 def _stack_init(fn, key, r: int):
     return jax.vmap(fn)(jax.random.split(key, r))
 

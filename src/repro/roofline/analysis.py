@@ -206,6 +206,8 @@ def analyze_compiled(compiled, *, arch: str, shape_cfg: ShapeConfig,
     from repro.roofline import hlo_cost
 
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):     # older jax wraps it in a list
+        cost = cost[0] if cost else {}
     xla_flops = float(cost.get("flops", 0.0))
     xla_bytes = float(cost.get("bytes accessed", 0.0))
     text = hlo_text if hlo_text is not None else compiled.as_text()

@@ -83,6 +83,16 @@ class ServeEngine:
         else:
             self._serve_params = self.params
         cfg = self.cfg
+        # Pre-tune the canonical single-utterance workload (full 30s
+        # window) so the common case never pays a first-invocation sweep
+        # (DESIGN.md §9.4); transcribe() re-warms for the actual batch and
+        # frame count before its timers start. Warming follows the
+        # *resolved* quantization q, which may override cfg.quant.
+        self._serve_quant = q
+        if (self.offload is not None and self.offload.tuner is not None
+                and cfg.family == "audio"):
+            whisper_lib.warm_tuning(cfg, self.offload, quant=q)
+            self.offload.tuner.save()
 
         def decode_fn(params, token, state):
             return model_lib.serve_step(params, cfg, token, state,
@@ -149,6 +159,19 @@ class ServeEngine:
         autoregressive decode (paper Fig 1)."""
         assert self.cfg.family == "audio"
         b = mel.shape[0]
+        if self.offload is not None and self.offload.tuner is not None:
+            # warm the *actual* batch/frame-count keys (the construction-
+            # time warm covers only the canonical 1x1500 shapes) so tuning
+            # searches never land inside the timed request; repeat calls
+            # are pure cache hits. Persist only when new winners appeared.
+            tuner = self.offload.tuner
+            n0 = tuner.searches
+            whisper_lib.warm_tuning(self.cfg, self.offload,
+                                    n_frames=mel.shape[1], batch=b,
+                                    n_tokens=max_new,
+                                    quant=self._serve_quant)
+            if tuner.searches > n0:
+                tuner.save()
         t0 = time.perf_counter()
         memory = whisper_lib.encode(self._serve_params, self.cfg,
                                     jnp.asarray(mel), engine=self.offload)
@@ -168,7 +191,7 @@ class ServeEngine:
     def energy_report(self, results: List[GenerationResult],
                       platform_w: float = energy.TPU_V5E_W) -> Dict[str, float]:
         total_s = sum(r.total_s for r in results)
-        return {
+        rep = {
             "requests": len(results),
             "total_s": total_s,
             "mean_s": total_s / max(len(results), 1),
@@ -177,3 +200,10 @@ class ServeEngine:
             "offload_rate": (self.offload.stats.offload_rate()
                              if self.offload else 0.0),
         }
+        if self.offload is not None and self.offload.tuner is not None:
+            t = self.offload.tuner
+            rep["tuning"] = {"cache_hits": t.cache.hits,
+                             "cache_misses": t.cache.misses,
+                             "searches": t.searches,
+                             "tuned_calls": self.offload.stats.tuned_calls}
+        return rep

@@ -1,0 +1,11 @@
+"""Burst/tile autotuning — the paper's LMM-size x burst-length co-design
+sweep (§4.4/§5.4, Fig 7/10) as a reusable subsystem (DESIGN.md §9):
+candidate enumeration under a VMEM budget (space), analytic/measured cost
+(cost), a persistent JSON winner cache (cache), and the dispatch-facing
+Autotuner (tuner) consumed by core.offload.OffloadEngine."""
+from repro.tuning.cache import TuningCache, TuningKey, TuningRecord  # noqa: F401
+from repro.tuning.cost import CostReport, analytic_cost, measured_cost  # noqa: F401
+from repro.tuning.space import (  # noqa: F401
+    VMEM_FULL_BYTES, TileCandidate, budget_grid, enumerate_candidates)
+from repro.tuning.tuner import (  # noqa: F401
+    Autotuner, kernel_for, padded_m, sweep_grid)

@@ -1,0 +1,139 @@
+"""Persistent tuning cache (DESIGN.md §9.3).
+
+Winners are keyed by the full problem identity the paper's design sweep
+varies: ``(kernel, M, N, K, dtype, vmem_budget)``. The store is a flat JSON
+file so caches produced on different hosts/backends can be merged (a
+measured entry beats an analytic one for the same key; otherwise lower cost
+wins) and shipped with the repo like the paper ships its chosen
+32KB/burst-16 operating point.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+SCHEMA_VERSION = 1
+
+
+@dataclass(frozen=True)
+class TuningKey:
+    kernel: str
+    m: int
+    n: int
+    k: int
+    dtype: str                    # weight path: q8_0 | bf16
+    vmem_budget_bytes: int
+
+    def encode(self) -> str:
+        return (f"{self.kernel}|m{self.m}|n{self.n}|k{self.k}"
+                f"|{self.dtype}|v{self.vmem_budget_bytes}")
+
+    @staticmethod
+    def decode(s: str) -> "TuningKey":
+        kernel, m, n, k, dtype, v = s.split("|")
+        return TuningKey(kernel, int(m[1:]), int(n[1:]), int(k[1:]),
+                         dtype, int(v[1:]))
+
+
+@dataclass(frozen=True)
+class TuningRecord:
+    block_m: int
+    block_n: int
+    block_k: int
+    cost_s: float
+    vmem_bytes: int
+    source: str                   # analytic | measured
+
+    def tiling(self) -> Dict[str, int]:
+        return {"block_m": self.block_m, "block_n": self.block_n,
+                "block_k": self.block_k}
+
+
+def _better(a: TuningRecord, b: TuningRecord) -> TuningRecord:
+    """Merge policy: measured beats analytic; within a source, lower cost."""
+    rank = {"measured": 0, "analytic": 1}
+    ka = (rank.get(a.source, 2), a.cost_s)
+    kb = (rank.get(b.source, 2), b.cost_s)
+    return a if ka <= kb else b
+
+
+@dataclass
+class TuningCache:
+    entries: Dict[TuningKey, TuningRecord] = field(default_factory=dict)
+    hits: int = 0
+    misses: int = 0
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def get(self, key: TuningKey) -> Optional[TuningRecord]:
+        rec = self.entries.get(key)
+        if rec is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return rec
+
+    def put(self, key: TuningKey, rec: TuningRecord) -> None:
+        cur = self.entries.get(key)
+        self.entries[key] = rec if cur is None else _better(rec, cur)
+
+    def merge(self, other: "TuningCache") -> "TuningCache":
+        for k, r in other.entries.items():
+            self.put(k, r)
+        return self
+
+    # -- persistence ----------------------------------------------------
+    def to_dict(self) -> dict:
+        return {"schema": SCHEMA_VERSION,
+                "entries": {k.encode(): asdict(r)
+                            for k, r in sorted(self.entries.items(),
+                                               key=lambda kv: kv[0].encode())}}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TuningCache":
+        if d.get("schema") != SCHEMA_VERSION:
+            raise ValueError(f"tuning cache schema {d.get('schema')!r} "
+                             f"!= {SCHEMA_VERSION}")
+        c = cls()
+        for ks, rv in d.get("entries", {}).items():
+            c.entries[TuningKey.decode(ks)] = TuningRecord(**rv)
+        return c
+
+    def save(self, path: str) -> str:
+        """Atomic write (tmp + rename) so a crashed sweep never truncates a
+        good cache — same discipline as train/checkpoint.py."""
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self.to_dict(), f, indent=1)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "TuningCache":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    @classmethod
+    def load_or_empty(cls, path: Optional[str]) -> "TuningCache":
+        """Best-effort load for dispatch-time use: a cache is an
+        optimization, so a missing, corrupt, or schema-mismatched file
+        degrades to an empty cache (the tuner re-derives winners) instead
+        of failing engine construction. Use ``load`` when corruption should
+        be an error (tests, explicit merges)."""
+        if path and os.path.exists(path):
+            try:
+                return cls.load(path)
+            except (ValueError, KeyError, TypeError, OSError) as e:
+                import warnings
+                warnings.warn(f"ignoring unreadable tuning cache {path}: {e}")
+        return cls()

@@ -1,0 +1,137 @@
+"""Tiling cost models: analytic roofline (deterministic, CI-safe) and
+wall-clock measurement (real backends) — DESIGN.md §9.2.
+
+The analytic model is the paper's PDP argument restated in roofline terms.
+For a (M,K) x (N,K) contraction tiled (bm, bn, bk):
+
+  compute_s = 2*M*N*K / peak_flops
+  memory_s  = HBM bytes / hbm_bw, where the tiling sets the *re-streaming*
+              factors: the activation panel is re-read once per N-tile
+              (N/bn passes) and the weight panel once per M-tile (M/bm
+              passes) — exactly the reason the paper's larger LMM (here:
+              larger tiles under a bigger VMEM budget) cuts DRAM energy.
+  launch_s  = grid_steps x per-step overhead — the per-burst configuration
+              cost the paper amortizes with longer bursts (here: bigger bk).
+
+cost_s = max(compute_s, memory_s) + launch_s.  PDP/EDP proxies multiply by
+the TDP-class chip power (core/energy.py), matching Eq. 1-3.
+
+Wall-clock measurement runs the real kernel via ``kernels.ops`` plumbing and
+is only meaningful on a TPU backend; in ``interpret=True`` CPU mode its
+numbers reflect the interpreter, so the tuner defaults to the analytic model
+off-TPU (DESIGN.md §6.3 path selection applies to tuning too).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core import energy
+from repro.core.qformats import QBLOCK
+from repro.roofline.analysis import HW, V5E
+from repro.tuning.space import TileCandidate
+
+# Per-grid-step launch overhead. On real hardware this is sub-microsecond
+# sequencer work; the constant only needs to *rank* candidates (it penalizes
+# tiny block_k the way the paper's CONF term penalizes burst 8).
+GRID_STEP_OVERHEAD_S = 2e-7
+
+
+@dataclass(frozen=True)
+class CostReport:
+    cand: TileCandidate
+    compute_s: float
+    memory_s: float
+    launch_s: float
+    cost_s: float
+    source: str                   # analytic | measured
+
+    def pdp_j(self, power_w: float = energy.TPU_V5E_W) -> float:
+        return energy.pdp(self.cost_s, power_w)
+
+    def edp_js(self, power_w: float = energy.TPU_V5E_W) -> float:
+        return energy.edp(self.cost_s, power_w)
+
+
+def _weight_bytes_per_elem(kernel: str) -> float:
+    # Q8_0: 1 int8 byte + 4-byte f32 scale per 32 elements.
+    if kernel.startswith("q8"):
+        return 1.0 + 4.0 / QBLOCK
+    return 2.0
+
+
+def _pad(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def analytic_cost(cand: TileCandidate, m: int, n: int, k: int, *,
+                  hw: HW = V5E, x_bytes: int = 2) -> CostReport:
+    """Deterministic roofline cost of running (M,N,K) with this tiling."""
+    bm, bn, bk = cand.block_m, cand.block_n, cand.block_k
+    # MXU padding tax: tiles off the (sublane=8, lane=128) grid compute on
+    # padded operands — the space admits e.g. bm=94 (1504's best divisor)
+    # and this term prices it fairly against aligned alternatives.
+    align = (_pad(bm, 8) / bm) * (_pad(bn, 128) / bn)
+    flops = 2.0 * m * n * k * align
+    w_bpe = _weight_bytes_per_elem(cand.kernel)
+    if cand.kernel == "q8_matvec":
+        # activation loaded once (resident), weights streamed once, out once
+        n_passes_x, m_passes_w = 1, 1
+        steps = n // bn
+    else:
+        n_passes_x = n // bn          # x panel re-read per N tile
+        m_passes_w = m // bm          # w panel re-read per M tile
+        steps = (m // bm) * (n // bn) * (k // bk)
+    bytes_hbm = (n_passes_x * m * k * x_bytes
+                 + m_passes_w * n * k * w_bpe
+                 + m * n * 4)
+    compute_s = flops / hw.peak_flops
+    memory_s = bytes_hbm / hw.hbm_bw
+    launch_s = steps * GRID_STEP_OVERHEAD_S
+    return CostReport(cand, compute_s, memory_s, launch_s,
+                      max(compute_s, memory_s) + launch_s, "analytic")
+
+
+def measured_cost(cand: TileCandidate, m: int, n: int, k: int, *,
+                  iters: int = 3, warmup: int = 1,
+                  interpret: Optional[bool] = None) -> CostReport:
+    """Median wall-clock of the real kernel under this tiling. Imports jax
+    lazily so the analytic path stays import-light."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.qformats import quantize_q8_0
+    from repro.kernels.bf16_matmul import bf16_matmul
+    from repro.kernels.q8_matmul import q8_matmul
+    from repro.kernels.q8_matvec import q8_matvec
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (n, k), jnp.float32) * 0.05
+    if cand.kernel == "bf16_matmul":
+        def fn():
+            return bf16_matmul(x, w, interpret=interpret, **cand.as_kwargs())
+    else:
+        wq = quantize_q8_0(w)
+        qs2d, sc = wq.flat_qs(), wq.scales
+        if cand.kernel == "q8_matvec":
+            def fn():
+                return q8_matvec(x, qs2d, sc, interpret=interpret,
+                                 **cand.as_kwargs())
+        else:
+            def fn():
+                return q8_matmul(x, qs2d, sc, interpret=interpret,
+                                 **cand.as_kwargs())
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    t = ts[len(ts) // 2]
+    return CostReport(cand, t, t, 0.0, t, "measured")

@@ -1,0 +1,122 @@
+"""Candidate tiling enumeration under a VMEM budget (DESIGN.md §9.1).
+
+The paper's design space is (LMM size) x (burst length); ours is
+(vmem_budget) x (block_m, block_n, block_k). A candidate is admissible iff
+
+  * every block divides its dimension exactly (the kernels refuse partial
+    tiles — ragged sizes are the mixed_exec residual's job, DESIGN.md §5),
+  * block_k holds whole Q8_0 blocks on the quantized paths (burst rule),
+  * the kernel's ``vmem_claim_bytes`` fits the budget (the 32KB-LMM analog).
+
+Budgets are swept from a 16KB-LMM *equivalent* up to the full per-core VMEM:
+the IMAX point aggregates 46 PE-local memories per lane, so the equivalence
+is ``budget_kb * AGG_UNITS`` (coverage.py's cap) mapped onto one core's
+VMEM claim. ``budget_grid()`` produces that sweep.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List
+
+from repro.core.qformats import QBLOCK
+from repro.kernels.bf16_matmul import vmem_claim_bytes as _bf16_claim
+from repro.kernels.q8_matmul import vmem_claim_bytes as _q8mm_claim
+from repro.kernels.q8_matvec import vmem_claim_bytes as _q8mv_claim
+
+# Full per-core VMEM on the v5e class (pallas_guide: ~16 MB/core); tilings
+# are rejected well before this by the sweep's budgets.
+VMEM_FULL_BYTES = 16 * 2**20
+
+# Caps/floors on block sizes. The space is *every* divisor of the dimension
+# inside [floor, cap] (plus the whole dimension as a fallback), not just
+# powers of two — Whisper's 1500-frame encoder pads to 1504 = 2^5 x 47,
+# whose best M tiles (94, 188) are not MXU-aligned; the cost model charges
+# them the MXU padding tax instead of excluding them.
+BLOCK_M_FLOOR, BLOCK_M_CAP = 8, 256      # sublane multiple preferred
+BLOCK_N_FLOOR, BLOCK_N_CAP = 128, 1024   # lane multiple preferred
+BLOCK_K_FLOOR, BLOCK_K_CAP = 32, 1024    # burst-length analog
+
+# Canonical power-of-two burst axis for sweep grids (benchmarks/tune_sweep).
+BLOCK_K_CANDIDATES = (32, 64, 128, 256, 512, 1024)
+
+KERNELS = ("q8_matmul", "q8_matvec", "bf16_matmul")
+
+
+@dataclass(frozen=True)
+class TileCandidate:
+    """One point of the (block_m, block_n, block_k) design space."""
+    kernel: str
+    block_m: int
+    block_n: int
+    block_k: int
+    vmem_bytes: int
+
+    def as_kwargs(self) -> Dict[str, int]:
+        if self.kernel == "q8_matvec":
+            return {"block_n": self.block_n}
+        return {"block_m": self.block_m, "block_n": self.block_n,
+                "block_k": self.block_k}
+
+
+def _divisors(dim: int, floor: int, cap: int, mult: int = 1) -> List[int]:
+    out = [d for d in range(floor, min(dim, cap) + 1)
+           if dim % d == 0 and d % mult == 0]
+    if not out and dim % mult == 0:
+        out = [dim]          # small dim: single whole-dim block
+    return out
+
+
+def _claim_fn(kernel: str) -> Callable[..., int]:
+    return {"q8_matmul": _q8mm_claim,
+            "q8_matvec": _q8mv_claim,
+            "bf16_matmul": _bf16_claim}[kernel]
+
+
+def enumerate_candidates(kernel: str, m: int, n: int, k: int, *,
+                         vmem_budget_bytes: int = VMEM_FULL_BYTES,
+                         x_bytes: int = 2) -> List[TileCandidate]:
+    """All admissible tilings of (M,N,K) for ``kernel`` within the budget.
+
+    Deterministic order (block_k desc, then block_n, block_m desc) so ties
+    in the cost model resolve identically across runs and hosts.
+    """
+    if kernel not in KERNELS:
+        raise ValueError(f"unknown kernel {kernel!r}; one of {KERNELS}")
+    claim = _claim_fn(kernel)
+    kmult = QBLOCK if kernel.startswith("q8") else 1
+    out: List[TileCandidate] = []
+    if kernel == "q8_matvec":
+        # the matvec keeps the whole (B, K) activation resident: only the
+        # N streaming granularity is tunable; K is a single block.
+        if k % QBLOCK:
+            return []
+        for bn in sorted(_divisors(n, BLOCK_N_FLOOR, BLOCK_N_CAP),
+                         reverse=True):
+            v = claim(b=m, k=k, block_n=bn, x_bytes=x_bytes)
+            if v <= vmem_budget_bytes:
+                out.append(TileCandidate(kernel, m, bn, k, v))
+        return out
+    for bk in sorted(_divisors(k, BLOCK_K_FLOOR, BLOCK_K_CAP, kmult),
+                     reverse=True):
+        for bn in sorted(_divisors(n, BLOCK_N_FLOOR, BLOCK_N_CAP),
+                         reverse=True):
+            for bm in sorted(_divisors(m, BLOCK_M_FLOOR, BLOCK_M_CAP),
+                             reverse=True):
+                v = claim(block_m=bm, block_n=bn, block_k=bk, x_bytes=x_bytes)
+                if v <= vmem_budget_bytes:
+                    out.append(TileCandidate(kernel, bm, bn, bk, v))
+    return out
+
+
+def budget_grid(min_kb: int = 16, max_bytes: int = VMEM_FULL_BYTES,
+                agg_units: int = 46) -> List[int]:
+    """Geometric sweep of VMEM budgets in bytes, from the paper's smallest
+    interesting LMM point (16 KB x AGG_UNITS aggregate ≈ 736 KB) up to full
+    VMEM — the x-axis of the (local-memory x burst) grid."""
+    out = []
+    b = min_kb * 1024 * agg_units
+    while b < max_bytes:
+        out.append(b)
+        b *= 2
+    out.append(max_bytes)
+    return out

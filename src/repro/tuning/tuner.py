@@ -1,0 +1,160 @@
+"""The autotuner: search the admissible tiling space, keep winners in the
+persistent cache, answer dispatch-time queries on the fast path
+(DESIGN.md §9).
+
+This is the TPU restatement of the paper's central experiment: the LMM-size
+x burst-length co-design sweep that lands on 32KB/burst-16. Here the local
+memory axis is ``vmem_budget_bytes`` (what one invocation may claim of the
+core's VMEM) and the burst axis is ``block_k``; the sweep runs offline or
+lazily at dispatch time, and the chosen operating points persist in a JSON
+cache exactly like the paper hard-wires its chosen design point into the
+bitstream — except ours is re-derivable per shape and budget.
+
+Modes:
+  analytic — rank candidates by the deterministic roofline model (CI, CPU).
+  measured — wall-clock the top analytic candidates on the real backend.
+  auto     — measured on TPU, analytic elsewhere (ops.py's path-selection
+             rule applied to tuning).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from repro.tuning.cache import TuningCache, TuningKey, TuningRecord
+from repro.tuning.cost import CostReport, analytic_cost, measured_cost
+from repro.tuning.space import (
+    VMEM_FULL_BYTES, TileCandidate, enumerate_candidates)
+
+# matches ops.py's decode-vs-prefill split: skinny batches take the matvec
+_MATVEC_MAX_M = 16
+_SUBLANE = 8            # ops.py pads M to this before dispatch
+# measured mode only wall-clocks the analytically-best few candidates
+_MEASURE_TOP = 8
+
+
+def padded_m(m: int) -> int:
+    """M after ops.py's sublane padding — tuning keys use this M so
+    dispatch-time queries hit the entries warmed offline."""
+    return m + (-m) % _SUBLANE
+
+
+def kernel_for(m: int, quantized: bool) -> str:
+    """Which kernel ops.py will dispatch this (raw, unpadded) M to."""
+    if quantized:
+        return "q8_matvec" if padded_m(m) <= 2 * _SUBLANE else "q8_matmul"
+    return "bf16_matmul"
+
+
+@dataclass
+class Autotuner:
+    """Facade owned by core.offload.OffloadEngine (one per engine)."""
+    cache: TuningCache = field(default_factory=TuningCache)
+    vmem_budget_bytes: int = VMEM_FULL_BYTES // 2
+    mode: str = "auto"                    # analytic | measured | auto
+    cache_path: Optional[str] = None
+    searches: int = 0                     # full sweeps run (cache misses)
+    # shapes where nothing fits the budget — memoized in-process so the
+    # hot dispatch path never repeats a fruitless sweep (negatives are
+    # budget-deterministic and cheap to re-derive, so they don't persist)
+    _no_tiling: set = field(default_factory=set, repr=False)
+
+    def __post_init__(self):
+        if self.mode not in ("analytic", "measured", "auto"):
+            raise ValueError(f"unknown tuning mode {self.mode!r}")
+        if self.cache_path:
+            self.cache.merge(TuningCache.load_or_empty(self.cache_path))
+
+    # -- mode resolution -------------------------------------------------
+    def _resolved_mode(self) -> str:
+        if self.mode != "auto":
+            return self.mode
+        import jax
+        return "measured" if jax.default_backend() == "tpu" else "analytic"
+
+    # -- search ----------------------------------------------------------
+    def search(self, kernel: str, m: int, n: int, k: int) -> Optional[TuningRecord]:
+        """Sweep the admissible space for this shape; None if nothing fits
+        the budget (caller falls back to the XLA path — the paper's
+        host-fallback for uncovered invocations)."""
+        self.searches += 1
+        cands = enumerate_candidates(
+            kernel, m, n, k, vmem_budget_bytes=self.vmem_budget_bytes)
+        if not cands:
+            return None
+        reports = [analytic_cost(c, m, n, k) for c in cands]
+        reports.sort(key=lambda r: r.cost_s)
+        if self._resolved_mode() == "measured":
+            reports = [measured_cost(r.cand, m, n, k)
+                       for r in reports[:_MEASURE_TOP]]
+            reports.sort(key=lambda r: r.cost_s)
+        best = reports[0]
+        return TuningRecord(
+            block_m=best.cand.block_m, block_n=best.cand.block_n,
+            block_k=best.cand.block_k, cost_s=best.cost_s,
+            vmem_bytes=best.cand.vmem_bytes, source=best.source)
+
+    def best_tiling(self, kernel: str, m: int, n: int, k: int,
+                    dtype: str) -> Optional[TuningRecord]:
+        """Dispatch-time entry point: cache hit is a dict lookup (the fast
+        path OffloadEngine sits on); a miss triggers one search whose winner
+        is cached for every later invocation of the same shape."""
+        key = TuningKey(kernel, m, n, k, dtype, self.vmem_budget_bytes)
+        if key in self._no_tiling:        # memoized negative: also a hit
+            self.cache.hits += 1
+            return None
+        rec = self.cache.get(key)
+        if rec is not None:
+            return rec
+        rec = self.search(kernel, m, n, k)
+        if rec is None:
+            self._no_tiling.add(key)
+        else:
+            self.cache.put(key, rec)
+        return rec
+
+    # -- offline warming -------------------------------------------------
+    def warm(self, mulmats: Iterable, dtype: str = "q8_0") -> int:
+        """Pre-tune an enumerated workload (core.coverage.MulMat items) so
+        serving never stalls on a first-invocation sweep. Returns the number
+        of distinct shapes tuned."""
+        seen = set()
+        for mm in mulmats:
+            quant = dtype.startswith("q8")
+            kern = kernel_for(mm.m, quant)
+            mp = padded_m(mm.m)
+            sig = (kern, mp, mm.n, mm.k)
+            if sig in seen:
+                continue
+            seen.add(sig)
+            self.best_tiling(kern, mp, mm.n, mm.k, dtype)
+        return len(seen)
+
+    def save(self, path: Optional[str] = None) -> Optional[str]:
+        p = path or self.cache_path
+        return self.cache.save(p) if p else None
+
+
+def sweep_grid(kernel: str, m: int, n: int, k: int, *,
+               budgets: Sequence[int],
+               block_ks: Sequence[int],
+               cost_fn=None) -> List[Tuple[int, CostReport]]:
+    """The paper's Fig-10-style grid: the cheapest admissible (block_m,
+    block_n) completion at each (vmem_budget, block_k) cell, as
+    (budget_bytes, CostReport) pairs. Cells where no tiling fits the
+    budget are omitted — the coverage cliff of Table 6. ``cost_fn(cand,
+    m, n, k) -> CostReport`` defaults to the analytic model; pass a
+    measured_cost wrapper on real backends (benchmarks/tune_sweep.py)."""
+    cost_fn = cost_fn or analytic_cost
+    out: List[Tuple[int, CostReport]] = []
+    for budget in budgets:
+        cands = enumerate_candidates(kernel, m, n, k,
+                                     vmem_budget_bytes=budget)
+        for bk in block_ks:
+            sub = [c for c in cands if c.block_k == bk]
+            if not sub:
+                continue
+            best = min((cost_fn(c, m, n, k) for c in sub),
+                       key=lambda r: r.cost_s)
+            out.append((budget, best))
+    return out

@@ -1,0 +1,33 @@
+"""Property-based coverage-model invariants (hypothesis).
+
+Needs the dev extra ``hypothesis`` (requirements-dev.txt); the module skips
+cleanly where dev deps are absent — the suite must collect on a bare
+runtime install (DESIGN.md §6.3's CI-on-CPU discipline).
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.coverage import MulMat, coverage, fits  # noqa: E402
+
+
+@given(st.integers(1, 2000), st.integers(1, 2000), st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_fits_monotone(m, k, units):
+    mm = MulMat("x", m=m, k=k, n=8)
+    fit_small = fits(mm, 8, agg_units=units)
+    fit_big = fits(mm, 256, agg_units=units)
+    assert fit_big or not fit_small   # fits(8KB) implies fits(256KB)
+
+
+@given(st.lists(st.tuples(st.integers(1, 512), st.integers(1, 512),
+                          st.integers(1, 512)), min_size=1, max_size=12),
+       st.sampled_from([8, 16, 32, 64, 128, 256]))
+@settings(max_examples=30, deadline=None)
+def test_coverage_bounded_and_budget_monotone(shapes, kb):
+    ms = [MulMat(f"m{i}", m=m, k=k, n=n)
+          for i, (m, k, n) in enumerate(shapes)]
+    c = coverage(ms, kb)
+    assert 0.0 <= c <= 1.0
+    assert coverage(ms, 2 * kb) >= c   # more budget never covers less

@@ -1,6 +1,6 @@
 """PDP/EDP energy model + burst/LMM experiments vs the paper's figures."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import energy
 from repro.core.amdahl import PAPER_SHARE, amdahl_bound, amdahl_speedup

@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.mixed_exec import (
     mixed_matmul, mixed_matmul_q8, residual_fraction, split_aligned,

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.qformats import (
     QBLOCK, QTensor, dequantize_q8_0, dequantize_tree, quantize_q8_0,

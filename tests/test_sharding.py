@@ -3,15 +3,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import abstract_mesh
 
 from repro.configs.registry import get_config, get_smoke_config
 from repro.launch import input_specs as IS
 from repro.models import model as M
 from repro.sharding import ctx, rules
 
-POD = AbstractMesh((16, 16), ("data", "model"))
-MULTI = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+POD = abstract_mesh((16, 16), ("data", "model"))
+MULTI = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _specs_by_path(params, mesh):
@@ -118,7 +120,7 @@ def test_ctx_constrain_noop_without_mesh():
 
 
 def test_ctx_divisibility_fallback():
-    mesh = AbstractMesh((4, 2), ("data", "model"))
+    mesh = abstract_mesh((4, 2), ("data", "model"))
     with ctx.activation_sharding(mesh):
         # dims indivisible by the axes -> no constraint failure, still traces
         def f(x):
@@ -128,7 +130,7 @@ def test_ctx_divisibility_fallback():
 
 
 def test_ctx_rank_mismatch_raises():
-    mesh = AbstractMesh((2, 2), ("data", "model"))
+    mesh = abstract_mesh((2, 2), ("data", "model"))
     with ctx.activation_sharding(mesh):
         with pytest.raises(ValueError):
             ctx.constrain(jnp.ones((2, 2)), "batch")

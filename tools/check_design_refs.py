@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Docs check: every ``DESIGN.md §X[.Y]`` cross-reference in the codebase
+must resolve to a section heading in DESIGN.md.
+
+A reference ``§6.3`` is satisfied by a heading containing ``§6.3``; a bare
+``§6`` is satisfied by ``§6`` itself (subsection headings do not satisfy
+their parent). Run from the repo root:
+
+  python tools/check_design_refs.py [--root PATH]
+
+Exit code 0 when all references resolve; 1 otherwise (CI gate).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+REF_RE = re.compile(r"DESIGN\.md\s+§([0-9]+(?:\.[0-9]+)?)")
+HEADING_RE = re.compile(r"^#{1,6}\s+§([0-9]+(?:\.[0-9]+)?)\b", re.M)
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+SCAN_EXTS = (".py", ".md")
+
+
+def collect_refs(root: str):
+    refs = {}          # section -> [file:line]
+    for d in SCAN_DIRS:
+        base = os.path.join(root, d)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, _, files in os.walk(base):
+            for fn in files:
+                if not fn.endswith(SCAN_EXTS):
+                    continue
+                path = os.path.join(dirpath, fn)
+                with open(path, encoding="utf-8", errors="replace") as f:
+                    for i, line in enumerate(f, 1):
+                        for sec in REF_RE.findall(line):
+                            rel = os.path.relpath(path, root)
+                            refs.setdefault(sec, []).append(f"{rel}:{i}")
+    return refs
+
+
+def collect_anchors(root: str):
+    path = os.path.join(root, "DESIGN.md")
+    if not os.path.exists(path):
+        return None
+    with open(path, encoding="utf-8") as f:
+        return set(HEADING_RE.findall(f.read()))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+    args = ap.parse_args(argv)
+    anchors = collect_anchors(args.root)
+    if anchors is None:
+        print("FAIL: DESIGN.md does not exist")
+        return 1
+    refs = collect_refs(args.root)
+    missing = {s: locs for s, locs in refs.items() if s not in anchors}
+    print(f"{sum(len(v) for v in refs.values())} references to "
+          f"{len(refs)} distinct sections; {len(anchors)} anchors in "
+          "DESIGN.md")
+    if missing:
+        for sec in sorted(missing):
+            print(f"FAIL: §{sec} referenced but has no DESIGN.md heading:")
+            for loc in missing[sec][:5]:
+                print(f"    {loc}")
+        return 1
+    print("ok: all DESIGN.md section references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
