@@ -38,6 +38,8 @@ BENCHMARK_INDEX = [
     ("lmm_latency", "Fig 11 / §5.1", "LMM size -> projected E2E latency"),
     ("exec_breakdown", "Fig 12", "EXEC/LOAD/CONF decomposition"),
     ("pdp_cross_platform", "Fig 9", "TDP-normalized cross-platform PDP"),
+    ("decode_throughput", "§5.1 E2E / DESIGN.md §10",
+     "engine-on vs engine-off decode tokens/s (jit-purity gate)"),
     ("multi_utterance", "Table 4/5",
      "multi-utterance latency + transcript agreement"),
 ]

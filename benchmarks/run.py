@@ -11,9 +11,9 @@ import time
 import traceback
 
 from benchmarks import (
-    burst_sweep, coverage_cdf, exec_breakdown, lmm_latency, lmm_power,
-    multi_utterance, pdp_cross_platform, profile_shares, q8_reconstruction,
-    tune_sweep)
+    burst_sweep, coverage_cdf, decode_throughput, exec_breakdown,
+    lmm_latency, lmm_power, multi_utterance, pdp_cross_platform,
+    profile_shares, q8_reconstruction, tune_sweep)
 
 SUITES = [
     ("q8_reconstruction (§4.2)", q8_reconstruction.run, False),
@@ -24,6 +24,8 @@ SUITES = [
     ("lmm_latency (Fig 11)", lmm_latency.run, False),
     ("pdp_cross_platform (Fig 9)", pdp_cross_platform.run, False),
     ("exec_breakdown (Fig 12)", exec_breakdown.run, False),
+    ("decode_throughput (§5.1 E2E / DESIGN.md §10)", decode_throughput.run,
+     False),
     ("profile_shares (Fig 4)", profile_shares.run, True),
     ("multi_utterance (Table 4/5)", multi_utterance.run, True),
 ]

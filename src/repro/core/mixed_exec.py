@@ -100,7 +100,9 @@ def select_burst(k: int, tuner=None, *, kernel: str = "q8_matmul",
     ``block_k`` (the burst-length analog, DESIGN.md §9.4) when an autotuner
     is attached and an admissible tiling exists for the full-K problem, else
     ``default``. The tuned value always satisfies the whole-Q8_0-block rule
-    because the candidate space enforces it."""
+    because the candidate space enforces it. Pure apart from tuner-cache
+    warming, so trace-time planning (``core/plan.py``, DESIGN.md §10.1)
+    calls it to resolve each entry's burst from static shapes."""
     if tuner is None:
         return default
     rec = tuner.best_tiling(kernel, m, n, k, dtype)

@@ -10,9 +10,20 @@ and account the PDP consequences. This is the glue between:
   mixed_exec   (aligned main + residual split)
   kernels.ops  (the actual compute paths)
   energy.py    (PDP/EDP accounting per step)
+  plan.py      (trace-time routing resolution — DESIGN.md §10)
+
+Plan/ledger split (DESIGN.md §10): ``linear`` is a pure function of its
+arguments — routing comes from ``core.plan.plan_linear`` (static shapes
+only) and no counters mutate inside a traced call, so the whole decode
+step jits with an engine attached. Accounting lives in the host-side
+``OffloadLedger``: eager (concrete-input) calls account directly, traced
+programs are accounted by committing their recorded ``DispatchPlan``
+multiplied by the number of executions (serve/engine.py does this per
+request).
 """
 from __future__ import annotations
 
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 
@@ -20,21 +31,23 @@ import jax
 import numpy as np
 
 from repro.core.coverage import MulMat, fits
-from repro.core.mixed_exec import select_burst, split_aligned
+from repro.core.plan import DispatchPlan, PlanEntry, plan_linear
 from repro.core.qformats import QTensor
 from repro.kernels import ops
-from repro.tuning import Autotuner, kernel_for, padded_m
+from repro.tuning import Autotuner
 
 
 @dataclass
 class OffloadStats:
-    """Per-run accounting (feeds the Fig 12 exec-breakdown benchmark)."""
+    """Aggregated accounting (feeds the Fig 12 exec-breakdown benchmark).
+    Totals container of the ``OffloadLedger`` — populated from committed
+    plans and eager calls, never from inside a traced function."""
     offloaded_calls: int = 0
     fallback_calls: int = 0
     offloaded_flops: int = 0
     fallback_flops: int = 0
     residual_flops: int = 0
-    tuned_calls: int = 0        # offloads that ran on a tuned tiling
+    tuned_calls: int = 0        # offloads that ran on a tuned burst
     by_kernel: Dict[str, int] = field(default_factory=dict)
 
     def offload_rate(self) -> float:
@@ -47,6 +60,39 @@ class OffloadStats:
 
 
 @dataclass
+class OffloadLedger:
+    """Host-side accounting — the *ledger* half of the plan/ledger split
+    (DESIGN.md §10.2). One entry-accounting path serves both modes: eager
+    calls account their entry once; jitted programs commit their recorded
+    ``DispatchPlan`` times the number of executions, which reproduces
+    exactly the totals the old in-trace counters produced when every call
+    ran un-jitted (tests/test_plan.py asserts this equivalence)."""
+    totals: OffloadStats = field(default_factory=OffloadStats)
+    commits: int = 0            # plans committed (not executions)
+
+    def account(self, entry: PlanEntry, times: int = 1) -> None:
+        s = self.totals
+        if entry.offload:
+            s.offloaded_calls += times
+            if entry.tuned:
+                s.tuned_calls += times
+            s.offloaded_flops += entry.offloaded_flops * times
+            s.residual_flops += entry.residual_flops * times
+        else:
+            s.fallback_calls += times
+            s.fallback_flops += entry.fallback_flops * times
+        s.by_kernel[entry.name] = s.by_kernel.get(entry.name, 0) + times
+
+    def commit(self, plan: Optional[DispatchPlan], times: int = 1) -> None:
+        """Account ``times`` executions of a traced program's plan."""
+        if plan is None or times <= 0:
+            return
+        for entry in plan:
+            self.account(entry, times)
+        self.commits += 1
+
+
+@dataclass
 class OffloadEngine:
     """The dispatcher. ``vmem_budget_kb`` is the LMM-size analog (per-core
     VMEM claim allowed for one invocation's working set; agg_units=1 on TPU);
@@ -54,52 +100,70 @@ class OffloadEngine:
     fallback when no ``tuner`` is attached. With a ``tuner``
     (tuning.Autotuner), both the split granularity and the kernel tile
     shapes come from the persistent tuning cache (DESIGN.md §9.4): a cache
-    hit is a dict lookup, so steady-state dispatch stays cheap."""
+    hit is a dict lookup, so steady-state dispatch stays cheap — and with
+    the plan/ledger split (DESIGN.md §10) even that lookup happens only at
+    trace time; compiled steady-state dispatch is zero Python."""
     vmem_budget_kb: int = 8 * 1024      # half of v5e's ~16 MiB VMEM
     burst: int = 256
     prefer_pallas: Optional[bool] = None
     interpret: Optional[bool] = None
     tuner: Optional[Autotuner] = None
-    stats: OffloadStats = field(default_factory=OffloadStats)
+    ledger: OffloadLedger = field(default_factory=OffloadLedger)
+    _recording: Optional[DispatchPlan] = field(default=None, repr=False)
+
+    @property
+    def stats(self) -> OffloadStats:
+        """Ledger totals — same read API as the pre-§10 in-trace counters."""
+        return self.ledger.totals
 
     def should_offload(self, m: int, k: int, n: int, name: str = "linear") -> bool:
         mm = MulMat(name, m=m, k=k, n=n)
         return fits(mm, self.vmem_budget_kb, optimized=True, agg_units=1)
 
-    def _select_burst(self, m: int, k: int, n: int, quantized: bool):
-        """(burst, tuned?) for this invocation class; engine default when
-        untuned or nothing admissible under the tuner's VMEM budget."""
-        if self.tuner is None:
-            return self.burst, False
-        kern = kernel_for(m, quantized)
-        dtype = "q8_0" if quantized else "bf16"
-        burst = select_burst(k, self.tuner, kernel=kern, m=padded_m(m), n=n,
-                             dtype=dtype, default=0)
-        return (burst, True) if burst else (self.burst, False)
+    # -- planning ---------------------------------------------------------
+    def plan_entry(self, m: int, k: int, n: int, *, quantized: bool,
+                   name: str = "linear") -> PlanEntry:
+        """Resolve routing for one static shape (pure; DESIGN.md §10.1)."""
+        return plan_linear(name, m, k, n, quantized=quantized,
+                           vmem_budget_kb=self.vmem_budget_kb,
+                           default_burst=self.burst, tuner=self.tuner)
 
+    @contextmanager
+    def recording(self, plan: DispatchPlan):
+        """While active, every ``linear`` call appends its ``PlanEntry`` to
+        ``plan`` instead of accounting to the ledger — used under abstract
+        tracing (``plan.record_plan``) to capture a program's routing."""
+        prev, self._recording = self._recording, plan
+        try:
+            yield plan
+        finally:
+            self._recording = prev
+
+    # -- execution --------------------------------------------------------
     def linear(self, x: jax.Array, w, name: str = "linear") -> jax.Array:
-        """y = x @ W^T with per-invocation offload decision + accounting."""
+        """y = x @ W^T, routed per the trace-time plan entry for this
+        shape. Pure under tracing: the entry derives from static shapes,
+        the kernel call is functional, and accounting only happens on
+        concrete (eager) inputs or into an explicit recording plan —
+        never as a side effect inside someone else's ``jax.jit`` trace."""
         k = x.shape[-1]
-        n = w.shape[0] if not isinstance(w, QTensor) else w.shape[0]
+        n = w.shape[0]
         m = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
-        flops = 2 * m * k * n
-        quantized = isinstance(w, QTensor)
-        burst, tuned = self._select_burst(m, k, n, quantized)
-        k_main, k_res = split_aligned(k, burst)
-        offload = self.should_offload(m, k, n, name)
-        if offload:
-            self.stats.offloaded_calls += 1
-            if tuned:
-                self.stats.tuned_calls += 1
-            self.stats.offloaded_flops += flops * k_main // max(k, 1)
-            self.stats.residual_flops += flops * k_res // max(k, 1)
-            y = ops.matmul(x, w, burst=burst,
-                           prefer_pallas=self.prefer_pallas,
-                           interpret=self.interpret,
-                           tuner=self.tuner)
-        else:
-            self.stats.fallback_calls += 1
-            self.stats.fallback_flops += flops
-            y = ops.matmul(x, w, burst=burst, prefer_pallas=False)
-        self.stats.by_kernel[name] = self.stats.by_kernel.get(name, 0) + 1
+        entry = self.plan_entry(m, k, n, quantized=isinstance(w, QTensor),
+                                name=name)
+        y = self.execute(x, w, entry)
+        if self._recording is not None:
+            self._recording.add(entry)
+        elif not isinstance(x, jax.core.Tracer):
+            self.ledger.account(entry)
         return y
+
+    def execute(self, x: jax.Array, w, entry: PlanEntry) -> jax.Array:
+        """Run one linear per a resolved ``PlanEntry`` — a pure function of
+        ``(x, w, entry)`` plus engine path config (DESIGN.md §10.1)."""
+        if entry.offload:
+            return ops.matmul(x, w, burst=entry.burst,
+                              prefer_pallas=self.prefer_pallas,
+                              interpret=self.interpret,
+                              tiling=entry.tiling)
+        return ops.matmul(x, w, burst=entry.burst, prefer_pallas=False)

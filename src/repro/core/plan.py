@@ -1,0 +1,188 @@
+"""Trace-time dispatch planning — the *plan* half of the plan/ledger split
+(DESIGN.md §10).
+
+The paper (and its CGLA companions) resolve per-``ggml_mul_mat`` routing as
+a **static, shape-keyed decision** fixed before execution: a kernel either
+fits the local-memory budget or it does not, and the burst/tiling operating
+point is chosen offline. This module is that idea restated for a traced
+JAX program: every routing input — the offload decision, the burst split,
+the tuned tiling — is a pure function of *static shapes* plus engine
+configuration, so it can be resolved once at trace time and recorded as a
+``PlanEntry``. Execution (``core/offload.py OffloadEngine.linear``) then
+consumes the entry without any Python-side mutation, which is what lets
+the serving decode step sit inside ``jax.jit`` with an engine attached
+(DESIGN.md §10.1).
+
+Accounting moves to the other half of the split: a ``DispatchPlan`` knows
+the per-execution cost of the traced program (its entries), and the
+host-side ``OffloadLedger`` (core/offload.py) multiplies that by how many
+times the compiled program actually ran (DESIGN.md §10.2). The in-trace
+counter mutation this replaces both broke jit purity and silently
+under-counted under any compilation cache.
+
+Plan construction is deterministic: ``plan_linear`` twice with the same
+shapes, budget and tuner cache state yields equal entries
+(tests/test_plan.py), mirroring §9.2's deterministic analytic cost model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
+
+from repro.core.coverage import MulMat, fits
+from repro.core.mixed_exec import select_burst, split_aligned
+from repro.tuning import kernel_for, padded_m
+
+
+@dataclass(frozen=True)
+class PlanEntry:
+    """Routing record for one linear call site at one static shape.
+
+    Everything the execution path needs (and everything the ledger
+    accounts) is here: the ``(name, m, k, n, dtype)`` identity, the
+    offload decision, the burst split, and the tuned tiling for the main
+    segment (``None`` when untuned — execution then falls back to the
+    module-level default tiles, exactly as before the refactor).
+    """
+    name: str
+    m: int
+    k: int
+    n: int
+    dtype: str                 # "q8_0" | "bf16"
+    offload: bool
+    burst: int
+    tuned: bool
+    kernel: str                # kernel ops.py will dispatch the main segment to
+    tiling: Optional[Tuple[int, int, int]]   # (block_m, block_n, block_k)
+    k_main: int
+    k_res: int
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.m * self.k * self.n
+
+    @property
+    def offloaded_flops(self) -> int:
+        """FLOPs on the accelerator kernel (main segment) if offloaded."""
+        return self.flops * self.k_main // max(self.k, 1) if self.offload else 0
+
+    @property
+    def residual_flops(self) -> int:
+        return self.flops * self.k_res // max(self.k, 1) if self.offload else 0
+
+    @property
+    def fallback_flops(self) -> int:
+        return 0 if self.offload else self.flops
+
+
+def plan_linear(name: str, m: int, k: int, n: int, *, quantized: bool,
+                vmem_budget_kb: int, default_burst: int,
+                tuner=None) -> PlanEntry:
+    """Resolve one linear's routing from static shapes — pure apart from
+    tuner-cache warming (a miss runs one search whose winner is cached, so
+    repeat calls are deterministic dict hits; see §9.3).
+
+    This is the single source of truth for dispatch: ``OffloadEngine``
+    calls it both when recording a plan (trace time) and when executing
+    eagerly, so plan and execution can never disagree.
+    """
+    dtype = "q8_0" if quantized else "bf16"
+    kern = kernel_for(m, quantized)
+    mp = padded_m(m)
+    burst = default_burst
+    tuned = False
+    if tuner is not None:
+        b = select_burst(k, tuner, kernel=kern, m=mp, n=n, dtype=dtype,
+                         default=0)
+        if b:
+            burst, tuned = b, True
+    k_main, k_res = split_aligned(k, burst)
+    offload = fits(MulMat(name, m=m, k=k, n=n), vmem_budget_kb,
+                   optimized=True, agg_units=1)
+    tiling = None
+    if tuner is not None and offload and k_main:
+        # the main segment is what the kernel sees (ops.py slices x to
+        # k_main before dispatch), so the tiling key uses k_main, not k
+        rec = tuner.best_tiling(kern, mp, n, k_main, dtype)
+        if rec is not None:
+            tiling = (rec.block_m, rec.block_n, rec.block_k)
+    return PlanEntry(name=name, m=m, k=k, n=n, dtype=dtype, offload=offload,
+                     burst=burst, tuned=tuned, kernel=kern, tiling=tiling,
+                     k_main=k_main, k_res=k_res)
+
+
+@dataclass
+class DispatchPlan:
+    """The routing of one traced program: ``PlanEntry`` per linear call, in
+    trace order. One plan describes ONE execution of the compiled program;
+    the ledger multiplies by the run count (DESIGN.md §10.2)."""
+    key: Hashable = None
+    entries: List[PlanEntry] = field(default_factory=list)
+
+    def add(self, entry: PlanEntry) -> None:
+        self.entries.append(entry)
+
+    def __iter__(self):
+        return iter(self.entries)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def signature(self) -> Tuple[PlanEntry, ...]:
+        """Hashable identity — equal signatures mean identical routing
+        (the determinism contract of tests/test_plan.py)."""
+        return tuple(self.entries)
+
+    def summary(self) -> Dict[str, Any]:
+        off = [e for e in self.entries if e.offload]
+        return {
+            "calls": len(self.entries),
+            "offloaded": len(off),
+            "tuned": sum(1 for e in off if e.tuned),
+            "offloaded_flops": sum(e.offloaded_flops for e in self.entries),
+            "fallback_flops": sum(e.fallback_flops for e in self.entries),
+            "residual_flops": sum(e.residual_flops for e in self.entries),
+        }
+
+
+@dataclass
+class PlanCache:
+    """Plans keyed by ``(phase, batch, seq, quant)``-style tuples so
+    steady-state serving resolves routing with one dict hit and zero
+    re-tracing (DESIGN.md §10.3)."""
+    plans: Dict[Hashable, DispatchPlan] = field(default_factory=dict)
+    hits: int = 0
+    misses: int = 0
+
+    def get_or_build(self, key: Hashable,
+                     build: Callable[[], DispatchPlan]) -> DispatchPlan:
+        plan = self.plans.get(key)
+        if plan is not None:
+            self.hits += 1
+            return plan
+        self.misses += 1
+        plan = build()
+        plan.key = key
+        self.plans[key] = plan
+        return plan
+
+    def __len__(self) -> int:
+        return len(self.plans)
+
+
+def record_plan(engine, fn, *args, key: Hashable = None) -> DispatchPlan:
+    """Build the ``DispatchPlan`` of ``fn(*args)`` by abstractly tracing it
+    (``jax.eval_shape`` — shapes only, nothing executes) with the engine in
+    recording mode. The recorded entries are exactly what a ``jax.jit`` of
+    the same function resolves at its own trace time, because both go
+    through ``plan_linear``; planning also warms the tuner cache so the
+    real compile's lookups are pure dict hits."""
+    import jax
+
+    plan = DispatchPlan(key=key)
+    with engine.recording(plan):
+        # a fresh wrapper per recording: jax.eval_shape is backed by the
+        # jit tracing cache, and a cache hit would skip the trace (and with
+        # it the recording side channel) for a repeated (fn, shapes) pair
+        jax.eval_shape(lambda *a: fn(*a), *args)
+    return plan

@@ -10,7 +10,7 @@ sublane padding for skinny decode batches.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Union
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -55,24 +55,26 @@ def _tuned(tuner, kernel: str, m: int, n: int, k: int, dtype: str):
 
 
 def _pallas_q8_main(x2d: jax.Array, wq: QTensor, interpret: bool,
-                    block_k: int, tuner=None) -> jax.Array:
+                    block_k: int, tuner=None, tiling=None) -> jax.Array:
     """Aligned-segment Q8_0 path: matvec variant for skinny M, tiled matmul
     otherwise. Handles M/N padding so the kernel only sees full tiles.
-    With a tuner attached, tile shapes come from the tuning cache instead of
-    the module-level defaults (DESIGN.md §9.4)."""
+    Tile shapes come (in precedence order) from an explicit ``tiling`` — a
+    trace-time plan entry's resolved ``(block_m, block_n, block_k)``
+    (DESIGN.md §10.1) — else a tuner-cache lookup (DESIGN.md §9.4), else
+    the module-level defaults."""
     qs2d = wq.flat_qs()
     n, k = qs2d.shape
     xp, m = _pad_m(x2d)
     mp = xp.shape[0]
     if mp <= 2 * _SUBLANE:
-        rec = _tuned(tuner, "q8_matvec", mp, n, k, "q8_0")
+        rec = tiling or _tuned(tuner, "q8_matvec", mp, n, k, "q8_0")
         # decode: N tiled at 512 when divisible, else largest divisor tile
-        bn = rec.block_n if rec else _largest_tile(n, 512)
+        bn = _block_shape(rec)[1] if rec else _largest_tile(n, 512)
         out = q8_matvec(xp, qs2d, wq.scales, block_n=bn, interpret=interpret)
     else:
-        rec = _tuned(tuner, "q8_matmul", mp, n, k, "q8_0")
+        rec = tiling or _tuned(tuner, "q8_matmul", mp, n, k, "q8_0")
         if rec:
-            bm, bn, bk = rec.block_m, rec.block_n, rec.block_k
+            bm, bn, bk = _block_shape(rec)
         else:
             bm = _largest_tile(mp, 128)
             bn = _largest_tile(n, 256)
@@ -83,19 +85,26 @@ def _pallas_q8_main(x2d: jax.Array, wq: QTensor, interpret: bool,
 
 
 def _pallas_bf16_main(x2d: jax.Array, w: jax.Array, interpret: bool,
-                      block_k: int, tuner=None) -> jax.Array:
+                      block_k: int, tuner=None, tiling=None) -> jax.Array:
     xp, m = _pad_m(x2d)
     mp = xp.shape[0]
     n, k = w.shape
-    rec = _tuned(tuner, "bf16_matmul", mp, n, k, "bf16")
+    rec = tiling or _tuned(tuner, "bf16_matmul", mp, n, k, "bf16")
     if rec:
-        bm, bn, bk = rec.block_m, rec.block_n, rec.block_k
+        bm, bn, bk = _block_shape(rec)
     else:
         bm = _largest_tile(mp, 128)
         bn = _largest_tile(n, 256)
         bk = _largest_tile(k, block_k)
     return bf16_matmul(xp, w, block_m=bm, block_n=bn, block_k=bk,
                        interpret=interpret)[:m]
+
+
+def _block_shape(rec) -> Tuple[int, int, int]:
+    """Normalize a tiling source — TuningRecord or plan-entry tuple."""
+    if isinstance(rec, tuple):
+        return rec
+    return rec.block_m, rec.block_n, rec.block_k
 
 
 def _largest_tile(dim: int, cap: int, mult: int = 1) -> int:
@@ -111,13 +120,17 @@ def matmul(x: jax.Array, w: Weight, *,
            prefer_pallas: Optional[bool] = None,
            interpret: Optional[bool] = None,
            block_k: int = 256,
-           tuner=None) -> jax.Array:
+           tuner=None,
+           tiling: Optional[Tuple[int, int, int]] = None) -> jax.Array:
     """y = x @ W^T for dense or Q8_0 weights, via the paper's mixed-execution
     split. x: (..., K); W: (N, K) array or QTensor. Returns (..., N) f32.
 
     prefer_pallas=None -> pallas on TPU, XLA elsewhere (dry-run lowers XLA).
-    ``tuner`` (a tuning.Autotuner) overrides the default tile shapes with
-    cached winners; ``burst``/``block_k`` remain the untuned fallbacks.
+    ``tiling`` pins the main-segment tile shapes to a trace-time plan
+    entry's resolution (DESIGN.md §10.1) — with it this function is a pure
+    function of its arguments, no cache lookups at execution. ``tuner``
+    (a tuning.Autotuner) instead resolves tiles via cached winners at call
+    time; ``burst``/``block_k`` remain the untuned fallbacks.
     """
     if prefer_pallas is None:
         prefer_pallas = _on_tpu()
@@ -128,14 +141,16 @@ def matmul(x: jax.Array, w: Weight, *,
     if isinstance(w, QTensor):
         if prefer_pallas:
             main = functools.partial(_pallas_q8_main, interpret=interpret,
-                                     block_k=block_k, tuner=tuner)
+                                     block_k=block_k, tuner=tuner,
+                                     tiling=tiling)
             out = mixed_matmul_q8(x2d, w, burst, main)
         else:
             out = mixed_matmul_q8(x2d, w, burst, ref.q8_matmul_ref)
     else:
         if prefer_pallas:
             main = functools.partial(_pallas_bf16_main, interpret=interpret,
-                                     block_k=block_k, tuner=tuner)
+                                     block_k=block_k, tuner=tuner,
+                                     tiling=tiling)
             out = mixed_matmul(x2d, w, burst, main)
         else:
             out = mixed_matmul(x2d, w, burst, ref.matmul_bf16_ref)

@@ -56,9 +56,15 @@ def main(argv=None):
     print("batch:", {k: round(v, 4) if isinstance(v, float) else v
                      for k, v in rep.items()})
     if offload is not None:
-        print(f"offload: {offload.stats.offloaded_calls} offloaded / "
+        # ledger totals: plan commits x executed steps, not in-trace
+        # counters — the decode step stays jitted (DESIGN.md §10.2)
+        print(f"offload ledger: {offload.stats.offloaded_calls} offloaded / "
               f"{offload.stats.fallback_calls} fallback "
-              f"(rate {offload.stats.offload_rate():.2%})")
+              f"(rate {offload.stats.offload_rate():.2%}, "
+              f"{offload.ledger.commits} plan commits)")
+        print(f"plan cache: {rep['dispatch']['plans']} plans, "
+              f"{rep['dispatch']['plan_hits']} hits / "
+              f"{rep['dispatch']['plan_misses']} misses")
     return 0
 
 

@@ -35,7 +35,10 @@ def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
 
 def linear(p: dict, x: jax.Array, engine=None, name: str = "linear") -> jax.Array:
     """y = x @ W^T (+ b). ``engine`` routes through the offload dispatcher
-    (paper path: Q8_0/bf16 Pallas kernel main + host residual)."""
+    (paper path: Q8_0/bf16 Pallas kernel main + host residual). The engine
+    path is trace-pure (DESIGN.md §10.1) — routing resolves from static
+    shapes and the static ``name`` identifies the call site in recorded
+    dispatch plans — so callers may sit inside ``jax.jit`` freely."""
     w = p["w"]
     if engine is not None:
         y = engine.linear(x, w, name=name).astype(x.dtype)

@@ -200,7 +200,12 @@ def init_serve_state(params: dict, cfg: ModelConfig, batch: int, max_len: int,
 def serve_step(params: dict, cfg: ModelConfig, token: jax.Array,
                state: ServeState, *, engine=None
                ) -> Tuple[jax.Array, ServeState]:
-    """token: (B, 1) i32 -> (logits (B, 1, V), state')."""
+    """token: (B, 1) i32 -> (logits (B, 1, V), state').
+
+    Trace-pure with an ``engine`` attached (DESIGN.md §10.1): offload
+    routing resolves from static shapes at trace time and nothing mutates
+    host state, so serve/engine.py jits this step unconditionally
+    (regression-tested by tests/test_plan.py)."""
     if cfg.family == "audio":
         logits, st = whisper.decode_step(params, cfg, token,
                                          state.layer_states, engine=engine)
@@ -218,7 +223,10 @@ def prefill(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
     """Sequence prefill that fills the decode caches, returning last-token
     logits. Implemented as a scan of serve_step for state-carrying families
     (correct, if not flash-fast; the prefill_32k dry-run cells lower
-    ``forward`` instead, which is the throughput path)."""
+    ``forward`` instead, which is the throughput path). This is the
+    serving engine's LM prefill: one jitted call replaces the former
+    per-token Python loop, and its dispatch plan records one scan-body
+    execution — the ledger commits it ``seq_len`` times (DESIGN.md §10.2)."""
     tokens = batch["tokens"]
     s = tokens.shape[1]
 

@@ -104,7 +104,10 @@ def init_whisper(key, cfg: ModelConfig, max_positions: int = 0) -> dict:
 # ---------------------------------------------------------------------------
 def encode(params: dict, cfg: ModelConfig, mel: jax.Array, *,
            engine=None, attn_chunk: int = 2048) -> jax.Array:
-    """mel: (B, F, n_mels) precomputed frames -> (B, F, d) memory."""
+    """mel: (B, F, n_mels) precomputed frames -> (B, F, d) memory.
+
+    Trace-pure with an ``engine`` (DESIGN.md §10.1): serving jits the
+    whole prefill (encode + cross-K/V projection) in one compiled call."""
     x = layers.linear(params["frontend"], mel.astype(jnp.float32), engine,
                       "enc.frontend")
     x = jax.nn.gelu(x)

@@ -8,17 +8,30 @@ residual on the host), everything else on the plain XLA path, and the
 energy model (core/energy.py) attributing accelerator-active vs host time
 exactly like Eq. 2/3.
 
+Dispatch is trace-pure (DESIGN.md §10): routing resolves at trace time
+from static shapes, so prefill and the decode step are wrapped in
+``jax.jit`` *unconditionally* — attaching an ``OffloadEngine`` no longer
+forces the flagship offloaded configuration onto the slow un-jitted path.
+Offload accounting comes from ``DispatchPlan``s recorded per
+``(phase, batch, seq, quant)`` key (cached — steady-state requests re-use
+them) and committed to the host-side ``OffloadLedger`` multiplied by the
+executed step counts.
+
 Request flow:
   submit(prompt)/submit_audio(mel) -> queued
   run() -> batches queued requests (padding to the batch size), prefills,
            then decodes greedily until EOS/max_new_tokens, recording
            wall-time and PDP per request.
+
+Token contract: ``GenerationResult.tokens`` holds exactly the ``steps``
+*generated* tokens, for both ``generate()`` and ``transcribe()`` — prompt
+tokens (and the SOT token) are never included.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Hashable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +40,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import energy
 from repro.core.offload import OffloadEngine
+from repro.core.plan import DispatchPlan, PlanCache, record_plan
 from repro.core.qformats import quantize_tree
 from repro.models import model as model_lib
 from repro.models import whisper as whisper_lib
@@ -34,7 +48,7 @@ from repro.models import whisper as whisper_lib
 
 @dataclass
 class GenerationResult:
-    tokens: List[int]
+    tokens: List[int]       # the ``steps`` generated tokens (no prompt/SOT)
     prefill_s: float
     decode_s: float
     steps: int
@@ -72,7 +86,7 @@ class ServeEngine:
     max_len: int = 512
     quant: Optional[str] = None          # None -> cfg.quant
     offload: Optional[OffloadEngine] = None
-    eos_id: int = 0
+    eos_id: Optional[int] = 0
     _serve_params: Any = field(default=None, repr=False)
     _decode_jit: Any = field(default=None, repr=False)
 
@@ -94,14 +108,52 @@ class ServeEngine:
             whisper_lib.warm_tuning(cfg, self.offload, quant=q)
             self.offload.tuner.save()
 
+        engine = self.offload
+
         def decode_fn(params, token, state):
             return model_lib.serve_step(params, cfg, token, state,
-                                        engine=self.offload)
+                                        engine=engine)
 
-        # the offload engine's python-side stats accounting makes the fn
-        # impure; jit only when no engine is attached
-        self._decode_jit = (jax.jit(decode_fn) if self.offload is None
-                            else decode_fn)
+        # dispatch is trace-pure (DESIGN.md §10.1): jit unconditionally,
+        # engine attached or not — routing resolves at trace time and all
+        # accounting happens via plan commits outside the traced fn
+        self._decode_fn = decode_fn
+        self._decode_jit = jax.jit(decode_fn)
+
+        eos = -1 if self.eos_id is None else int(self.eos_id)
+
+        def step_fn(params, token, done, state):
+            """One greedy decode step with an on-device done-mask: emit
+            the argmax token and fold its EOS test into ``done`` without
+            leaving the device."""
+            logits, state = decode_fn(params, token, state)
+            nxt = self._argmax(logits[:, -1])[:, None]
+            done = done | (nxt[:, 0] == eos)
+            return nxt, done, state
+
+        self._step_jit = jax.jit(step_fn)
+
+        if cfg.family == "audio":
+            def prefill_fn(params, mel):
+                """Whisper prefill: encoder once per utterance batch +
+                per-layer cross-K/V projection (paper Fig 1)."""
+                memory = whisper_lib.encode(params, cfg, mel, engine=engine)
+                state = model_lib.init_serve_state(
+                    params, cfg, mel.shape[0], self.max_len, memory=memory,
+                    engine=engine)
+                return memory, state
+        else:
+            def prefill_fn(params, tokens):
+                """LM prefill: one traced scan of serve_step over the
+                prompt (fills the decode caches, returns last logits)."""
+                state = model_lib.init_serve_state(
+                    params, cfg, tokens.shape[0], self.max_len)
+                return model_lib.prefill(params, cfg, {"tokens": tokens},
+                                         state, engine=engine)
+
+        self._prefill_fn = prefill_fn
+        self._prefill_jit = jax.jit(prefill_fn)
+        self._plans = PlanCache()
 
     def _argmax(self, logits: jax.Array) -> jax.Array:
         """Greedy pick over the true vocab (vocab_pad columns excluded)."""
@@ -111,54 +163,74 @@ class ServeEngine:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
     # ------------------------------------------------------------------
+    def _plan(self, key: Hashable, fn, *args) -> Optional[DispatchPlan]:
+        """Routing plan for ``fn(*args)``, cached per shape key
+        (DESIGN.md §10.3): repeat requests at the same (batch, seq,
+        quant) point are dict hits and never re-trace."""
+        if self.offload is None:
+            return None
+        return self._plans.get_or_build(
+            key, lambda: record_plan(self.offload, fn, *args, key=key))
+
     def _greedy_loop(self, state, first_token: jax.Array,
                      max_new: int) -> Dict[str, Any]:
         b = first_token.shape[0]
         token = first_token
-        out = np.zeros((b, max_new), np.int32)
-        done = np.zeros((b,), bool)
+        done = jnp.zeros((b,), bool)
+        toks = []
         t0 = time.perf_counter()
         steps = 0
-        for i in range(max_new):
-            logits, state = self._decode_jit(self._serve_params, token, state)
-            token = self._argmax(logits[:, -1])[:, None]
-            tok_np = np.asarray(token)[:, 0]
-            out[:, i] = tok_np
-            done |= tok_np == self.eos_id
+        for _ in range(max_new):
+            token, done, state = self._step_jit(self._serve_params, token,
+                                                done, state)
+            toks.append(token)
             steps += 1
             if bool(done.all()):
                 break
         jax.block_until_ready(token)
-        return {"tokens": out[:, :steps], "decode_s": time.perf_counter() - t0,
+        out = (np.concatenate([np.asarray(t) for t in toks], axis=1)
+               if toks else np.zeros((b, 0), np.int32))
+        return {"tokens": out, "decode_s": time.perf_counter() - t0,
                 "steps": steps, "state": state}
 
     # ------------------------------------------------------------------
     def generate(self, prompts: np.ndarray, max_new: int = 32
                  ) -> List[GenerationResult]:
-        """LM families. prompts: (B, S_prompt) int32 (already padded)."""
+        """LM families. prompts: (B, S_prompt) int32 (already padded).
+        Returns one result per request; ``tokens`` are the generated
+        tokens only (see the module-level token contract)."""
         b, s = prompts.shape
+        q = self._serve_quant
+        tokens = jnp.asarray(prompts)
+        prefill_plan = self._plan(("prefill", q, b, s), self._prefill_fn,
+                                  self._serve_params, tokens)
         t0 = time.perf_counter()
-        state = model_lib.init_serve_state(
-            self._serve_params, self.cfg, b, self.max_len)
-        # prefill by stepping the prompt (cache-filling path)
-        tok = jnp.asarray(prompts[:, :1])
-        for t in range(s):
-            tok = jnp.asarray(prompts[:, t:t + 1])
-            logits, state = self._decode_jit(self._serve_params, tok, state)
+        logits, state = self._prefill_jit(self._serve_params, tokens)
+        jax.block_until_ready(logits)
         first = self._argmax(logits[:, -1])[:, None]
         prefill_s = time.perf_counter() - t0
+        step_plan = self._plan(("step", q, b), self._decode_fn,
+                               self._serve_params, first, state)
         r = self._greedy_loop(state, first, max_new)
+        if self.offload is not None:
+            # the prefill plan records ONE scan-body execution; the scan
+            # runs once per prompt token
+            self.offload.ledger.commit(prefill_plan, times=s)
+            self.offload.ledger.commit(step_plan, times=r["steps"])
         return [GenerationResult(
-            tokens=[int(prompts[i, -1])] + r["tokens"][i].tolist(),
+            tokens=r["tokens"][i].tolist(),
             prefill_s=prefill_s / b, decode_s=r["decode_s"] / b,
             steps=r["steps"]) for i in range(b)]
 
     def transcribe(self, mel: np.ndarray, sot_id: int = 1,
                    max_new: int = 32) -> List[GenerationResult]:
         """Whisper path: encoder once per utterance batch, cross-KV cached,
-        autoregressive decode (paper Fig 1)."""
+        autoregressive decode (paper Fig 1). ``tokens`` are the generated
+        tokens only (the SOT seed token is not echoed back) — identical
+        contract to ``generate()``."""
         assert self.cfg.family == "audio"
-        b = mel.shape[0]
+        b, f = mel.shape[0], mel.shape[1]
+        q = self._serve_quant
         if self.offload is not None and self.offload.tuner is not None:
             # warm the *actual* batch/frame-count keys (the construction-
             # time warm covers only the canonical 1x1500 shapes) so tuning
@@ -167,21 +239,24 @@ class ServeEngine:
             tuner = self.offload.tuner
             n0 = tuner.searches
             whisper_lib.warm_tuning(self.cfg, self.offload,
-                                    n_frames=mel.shape[1], batch=b,
-                                    n_tokens=max_new,
-                                    quant=self._serve_quant)
+                                    n_frames=f, batch=b, n_tokens=max_new,
+                                    quant=q)
             if tuner.searches > n0:
                 tuner.save()
+        mel_j = jnp.asarray(mel)
+        prefill_plan = self._plan(("prefill", q, b, f), self._prefill_fn,
+                                  self._serve_params, mel_j)
         t0 = time.perf_counter()
-        memory = whisper_lib.encode(self._serve_params, self.cfg,
-                                    jnp.asarray(mel), engine=self.offload)
-        state = model_lib.init_serve_state(
-            self._serve_params, self.cfg, b, self.max_len, memory=memory,
-            engine=self.offload)
+        memory, state = self._prefill_jit(self._serve_params, mel_j)
         jax.block_until_ready(memory)
         prefill_s = time.perf_counter() - t0
         first = jnp.full((b, 1), sot_id, jnp.int32)
+        step_plan = self._plan(("step", q, b, f), self._decode_fn,
+                               self._serve_params, first, state)
         r = self._greedy_loop(state, first, max_new)
+        if self.offload is not None:
+            self.offload.ledger.commit(prefill_plan, times=1)
+            self.offload.ledger.commit(step_plan, times=r["steps"])
         return [GenerationResult(
             tokens=r["tokens"][i].tolist(), prefill_s=prefill_s / b,
             decode_s=r["decode_s"] / b, steps=r["steps"])
@@ -200,6 +275,11 @@ class ServeEngine:
             "offload_rate": (self.offload.stats.offload_rate()
                              if self.offload else 0.0),
         }
+        if self.offload is not None:
+            rep["dispatch"] = {"plans": len(self._plans),
+                               "plan_hits": self._plans.hits,
+                               "plan_misses": self._plans.misses,
+                               "ledger_commits": self.offload.ledger.commits}
         if self.offload is not None and self.offload.tuner is not None:
             t = self.offload.tuner
             rep["tuning"] = {"cache_hits": t.cache.hits,

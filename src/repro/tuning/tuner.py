@@ -117,7 +117,13 @@ class Autotuner:
     def warm(self, mulmats: Iterable, dtype: str = "q8_0") -> int:
         """Pre-tune an enumerated workload (core.coverage.MulMat items) so
         serving never stalls on a first-invocation sweep. Returns the number
-        of distinct shapes tuned."""
+        of distinct full-K shapes tuned.
+
+        Each shape warms two keys: the full-K query (what the burst
+        selection asks, §9.4) and — when the winning ``block_k`` does not
+        divide K — the main-segment ``k_main = ⌊K/b⌋·b`` query that
+        trace-time planning resolves tiles against (DESIGN.md §10.1), so
+        plan recording is dict-hits-only too."""
         seen = set()
         for mm in mulmats:
             quant = dtype.startswith("q8")
@@ -127,7 +133,11 @@ class Autotuner:
             if sig in seen:
                 continue
             seen.add(sig)
-            self.best_tiling(kern, mp, mm.n, mm.k, dtype)
+            rec = self.best_tiling(kern, mp, mm.n, mm.k, dtype)
+            if rec is not None:
+                k_main = (mm.k // rec.block_k) * rec.block_k
+                if k_main and k_main != mm.k:
+                    self.best_tiling(kern, mp, mm.n, k_main, dtype)
         return len(seen)
 
     def save(self, path: Optional[str] = None) -> Optional[str]:

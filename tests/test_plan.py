@@ -1,0 +1,240 @@
+"""Plan/ledger split (DESIGN.md §10): plan determinism, plan-cache hits,
+ledger equivalence with the old in-trace counters, and jit purity of the
+engine-attached decode step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.core.offload import OffloadEngine, OffloadLedger, OffloadStats
+from repro.core.plan import DispatchPlan, PlanCache, plan_linear, record_plan
+from repro.core.qformats import quantize_q8_0
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+from repro.tuning import Autotuner
+
+
+@pytest.fixture(scope="module")
+def whisper_setup():
+    cfg = get_smoke_config("whisper-tiny")
+    params = M.init_params(jax.random.PRNGKey(0), cfg, 64)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Plan construction
+# ---------------------------------------------------------------------------
+def test_plan_linear_deterministic():
+    kw = dict(quantized=True, vmem_budget_kb=8 * 1024, default_burst=256,
+              tuner=None)
+    a = plan_linear("ffn.up", 8, 384, 1536, **kw)
+    b = plan_linear("ffn.up", 8, 384, 1536, **kw)
+    assert a == b
+    assert a.offload and a.dtype == "q8_0"
+    assert a.k_main + a.k_res == a.k
+    assert a.offloaded_flops + a.residual_flops == a.flops
+
+
+def test_plan_linear_deterministic_with_tuner():
+    """With a tuner, the first call may search; repeats are cache hits that
+    resolve to the identical entry (including the tiling)."""
+    tun = Autotuner(vmem_budget_bytes=2**21, mode="analytic")
+    kw = dict(quantized=True, vmem_budget_kb=8 * 1024, default_burst=256,
+              tuner=tun)
+    a = plan_linear("q", 8, 64, 32, **kw)
+    n_searches = tun.searches
+    b = plan_linear("q", 8, 64, 32, **kw)
+    assert a == b and a.tuned
+    assert tun.searches == n_searches       # repeat resolution: dict hits
+
+
+def test_plan_entry_fallback_accounting():
+    e = plan_linear("big", 1024, 1024, 8, quantized=False, vmem_budget_kb=1,
+                    default_burst=32, tuner=None)
+    assert not e.offload
+    assert e.fallback_flops == e.flops
+    assert e.offloaded_flops == 0 and e.residual_flops == 0
+
+
+def test_record_plan_deterministic(whisper_setup):
+    """Two recordings of the same traced program yield identical routing —
+    the static-shape-keyed decision property of the companion papers."""
+    cfg, params = whisper_setup
+    eng = ServeEngine(cfg, params, max_len=16, quant="q8_0",
+                      offload=OffloadEngine(prefer_pallas=False), eos_id=-1)
+    mel = jnp.zeros((1, 8, cfg.n_mels), jnp.float32)
+    p1 = record_plan(eng.offload, eng._prefill_fn, eng._serve_params, mel)
+    p2 = record_plan(eng.offload, eng._prefill_fn, eng._serve_params, mel)
+    assert len(p1) > 0
+    assert p1.signature() == p2.signature()
+    # recording is accounting-free: nothing reached the ledger
+    assert eng.offload.stats.offloaded_calls == 0
+    assert eng.offload.stats.fallback_calls == 0
+
+
+def test_plan_summary_totals():
+    plan = DispatchPlan(key="k")
+    plan.add(plan_linear("a", 8, 64, 32, quantized=True,
+                         vmem_budget_kb=8 * 1024, default_burst=32,
+                         tuner=None))
+    plan.add(plan_linear("b", 1024, 1024, 8, quantized=False,
+                         vmem_budget_kb=1, default_burst=32, tuner=None))
+    s = plan.summary()
+    assert s["calls"] == 2 and s["offloaded"] == 1
+    assert s["fallback_flops"] == 2 * 1024 * 1024 * 8
+
+
+# ---------------------------------------------------------------------------
+# Plan cache
+# ---------------------------------------------------------------------------
+def test_plan_cache_hits_across_repeated_transcribe(whisper_setup):
+    cfg, params = whisper_setup
+    eng = ServeEngine(cfg, params, max_len=16, quant="q8_0",
+                      offload=OffloadEngine(prefer_pallas=False), eos_id=-1)
+    mel = np.zeros((2, 8, cfg.n_mels), np.float32)
+    eng.transcribe(mel, max_new=3)
+    n_plans = len(eng._plans)
+    assert n_plans == 2                      # prefill + step
+    assert eng._plans.misses == 2 and eng._plans.hits == 0
+    eng.transcribe(mel, max_new=3)
+    assert len(eng._plans) == n_plans        # steady state: no new plans
+    assert eng._plans.hits == 2
+    # a different batch shape is a different routing point
+    eng.transcribe(np.zeros((1, 8, cfg.n_mels), np.float32), max_new=3)
+    assert len(eng._plans) == 4
+
+
+def test_plan_cache_get_or_build():
+    pc = PlanCache()
+    built = []
+
+    def build():
+        built.append(1)
+        return DispatchPlan()
+
+    p1 = pc.get_or_build(("k", 1), build)
+    p2 = pc.get_or_build(("k", 1), build)
+    assert p1 is p2 and len(built) == 1
+    assert pc.hits == 1 and pc.misses == 1
+
+
+# ---------------------------------------------------------------------------
+# Ledger
+# ---------------------------------------------------------------------------
+def test_ledger_commit_multiplies():
+    led = OffloadLedger()
+    plan = DispatchPlan()
+    plan.add(plan_linear("x", 1, 64, 32, quantized=True,
+                         vmem_budget_kb=8 * 1024, default_burst=32,
+                         tuner=None))
+    led.commit(plan, times=5)
+    assert led.totals.offloaded_calls == 5
+    assert led.totals.by_kernel["x"] == 5
+    led.commit(None, times=3)                # no plan: no-op
+    assert led.totals.offloaded_calls == 5
+
+
+def test_ledger_matches_eager_reference_on_whisper_q8(whisper_setup):
+    """The acceptance check of DESIGN.md §10.2: committed ledger totals on
+    the whisper Q8_0 workload equal what the pre-refactor in-trace counters
+    reported — i.e. an eager (un-jitted) run of the identical program."""
+    cfg, params = whisper_setup
+    mel = np.random.default_rng(0).standard_normal(
+        (2, 8, cfg.n_mels)).astype(np.float32)
+    max_new = 4
+
+    served = OffloadEngine(prefer_pallas=False)
+    eng = ServeEngine(cfg, params, max_len=16, quant="q8_0", offload=served,
+                      eos_id=-1)
+    res = eng.transcribe(mel, max_new=max_new)
+    steps = res[0].steps
+
+    # reference with the OLD counting semantics: run the identical program
+    # un-jitted, recording every linear call of every execution and
+    # committing each execution once — exactly what the pre-refactor
+    # in-trace counters added up when the decode fn could not jit
+    ref = OffloadEngine(prefer_pallas=False)
+    import repro.models.whisper as W
+    p = DispatchPlan()
+    with ref.recording(p):
+        memory = W.encode(eng._serve_params, cfg, jnp.asarray(mel),
+                          engine=ref)
+        state = M.init_serve_state(eng._serve_params, cfg, mel.shape[0], 16,
+                                   memory=memory, engine=ref)
+    ref.ledger.commit(p, times=1)
+    token = jnp.full((mel.shape[0], 1), 1, jnp.int32)
+    for _ in range(steps):
+        p = DispatchPlan()
+        with ref.recording(p):
+            logits, state = M.serve_step(eng._serve_params, cfg, token,
+                                         state, engine=ref)
+        ref.ledger.commit(p, times=1)
+        token = jnp.argmax(
+            logits[:, -1, :cfg.vocab_size], axis=-1).astype(jnp.int32)[:, None]
+
+    assert served.stats.offloaded_calls == ref.stats.offloaded_calls
+    assert served.stats.fallback_calls == ref.stats.fallback_calls
+    assert served.stats.tuned_calls == ref.stats.tuned_calls
+    assert served.stats.offloaded_flops == ref.stats.offloaded_flops
+    assert served.stats.fallback_flops == ref.stats.fallback_flops
+    assert served.stats.residual_flops == ref.stats.residual_flops
+    assert served.stats.by_kernel == ref.stats.by_kernel
+
+
+# ---------------------------------------------------------------------------
+# Jit purity
+# ---------------------------------------------------------------------------
+def test_serve_step_jits_with_engine_attached(whisper_setup):
+    """The tentpole regression test: serve_step is traceable/compilable
+    with an offload engine, tracing leaves no accounting residue, and the
+    serving engine's step really is wrapped in jax.jit."""
+    cfg, params = whisper_setup
+    off = OffloadEngine(prefer_pallas=False)
+    eng = ServeEngine(cfg, params, max_len=16, quant="q8_0", offload=off,
+                      eos_id=-1)
+    assert isinstance(eng._decode_jit, jax.stages.Wrapped)
+    assert isinstance(eng._step_jit, jax.stages.Wrapped)
+    assert isinstance(eng._prefill_jit, jax.stages.Wrapped)
+
+    mel = jnp.zeros((1, 8, cfg.n_mels), jnp.float32)
+    memory, state = eng._prefill_jit(eng._serve_params, mel)
+    token = jnp.full((1, 1), 1, jnp.int32)
+    before = OffloadStats(**{k: (dict(v) if isinstance(v, dict) else v)
+                             for k, v in vars(off.stats).items()})
+    # abstract tracing of the engine-attached step must be side-effect free
+    jax.eval_shape(eng._decode_fn, eng._serve_params, token, state)
+    assert vars(off.stats) == vars(before)
+    # and the compiled step executes (twice — no trace-count dependence)
+    l1, s1 = eng._decode_jit(eng._serve_params, token, state)
+    l2, _ = eng._decode_jit(eng._serve_params, token, state)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_eager_linear_still_accounts():
+    """Standalone dispatcher API keeps its pre-§10 accounting: concrete
+    (eager) calls hit the ledger directly."""
+    eng = OffloadEngine(burst=32, prefer_pallas=False)
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+    wq = quantize_q8_0(jax.random.normal(jax.random.PRNGKey(1), (32, 64)))
+    eng.linear(x, wq, name="eager")
+    assert eng.stats.offloaded_calls == 1
+    assert eng.stats.by_kernel["eager"] == 1
+
+
+def test_traced_linear_without_recording_is_pure():
+    """Inside someone else's jit trace (no recording active), linear must
+    not account — that was exactly the old impurity."""
+    eng = OffloadEngine(burst=32, prefer_pallas=False)
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 64))
+
+    @jax.jit
+    def f(x):
+        return eng.linear(x, w, name="traced")
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+    y1 = f(x)
+    y2 = f(x)                                # cache hit: no re-trace
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    assert eng.stats.offloaded_calls == 0
+    assert eng.stats.fallback_calls == 0

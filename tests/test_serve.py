@@ -31,6 +31,23 @@ def test_generate_batched(lm_setup):
     assert len(res) == 3
     assert all(r.steps == 5 for r in res)
     assert all(0 <= t < cfg.vocab_size for r in res for t in r.tokens)
+    # token contract: exactly the generated tokens, no prompt echo
+    assert all(len(r.tokens) == r.steps for r in res)
+
+
+def test_token_contract_consistent_across_paths(lm_setup, whisper_setup):
+    """generate() and transcribe() return the same shape of result: the
+    ``steps`` generated tokens, nothing prepended (serve/engine.py module
+    docstring contract)."""
+    cfg, params = lm_setup
+    lm = ServeEngine(cfg, params, max_len=64, quant="none", eos_id=-1)
+    r_lm = lm.generate(np.ones((1, 3), np.int32), max_new=4)[0]
+    assert len(r_lm.tokens) == r_lm.steps == 4
+    acfg, aparams = whisper_setup
+    au = ServeEngine(acfg, aparams, max_len=64, quant="none", eos_id=-1)
+    mel = np.zeros((1, 8, acfg.n_mels), np.float32)
+    r_au = au.transcribe(mel, max_new=4)[0]
+    assert len(r_au.tokens) == r_au.steps == 4
 
 
 def test_generate_deterministic(lm_setup):
@@ -77,7 +94,7 @@ def test_eos_stops_early(lm_setup):
     eng = ServeEngine(cfg, params, max_len=64, quant="none", eos_id=None)
     p = np.ones((1, 2), np.int32)
     probe = eng.generate(p, max_new=3)
-    first_tok = probe[0].tokens[1]
+    first_tok = probe[0].tokens[0]          # first *generated* token
     eng2 = ServeEngine(cfg, params, max_len=64, quant="none",
                        eos_id=int(first_tok))
     res = eng2.generate(p, max_new=8)
