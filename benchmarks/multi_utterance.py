@@ -6,30 +6,35 @@ length through the FULL whisper-tiny config, greedy-decoded twice — dense
 bf16 XLA path (the "CPU" reference) vs Q8_0 + offload dispatcher (the
 "IMAX" path) — reporting per-utterance latency and token agreement.
 Usage:
-  PYTHONPATH=src python -m benchmarks.multi_utterance
+  PYTHONPATH=src python -m benchmarks.multi_utterance \
+      [--n-utts N] [--max-new M] [--smoke]
 
-No CLI flags; ``run(n_utts=5, max_new=8)`` is parameterized for callers
-(benchmarks.run uses the defaults). Wall-clock heavy: decodes the full
-whisper-tiny config twice per utterance. Writes
+``--smoke`` runs the reduced whisper-tiny smoke config with short
+utterances (CI-speed); the default decodes the FULL config twice per
+utterance and is wall-clock heavy. ``run(n_utts=5, max_new=8)`` stays
+parameterized for callers (benchmarks.run uses the defaults). Writes
 experiments/bench/multi_utterance.json.
 """
 from __future__ import annotations
+
+import argparse
 
 import jax
 import numpy as np
 
 from benchmarks.common import fmt_table, save
-from repro.configs.registry import get_config
+from repro.configs.registry import get_config, get_smoke_config
 from repro.core.offload import OffloadEngine
 from repro.models import model as model_lib
 from repro.serve.engine import ServeEngine
 
 
-def run(n_utts: int = 5, max_new: int = 8) -> dict:
-    cfg = get_config("whisper-tiny")
+def run(n_utts: int = 5, max_new: int = 8, smoke: bool = False) -> dict:
+    cfg = (get_smoke_config if smoke else get_config)("whisper-tiny")
     params = model_lib.init_params(jax.random.PRNGKey(0), cfg, 448)
     rng = np.random.default_rng(0)
-    lengths = rng.integers(64, 256, n_utts)
+    lengths = rng.integers(8, 24, n_utts) if smoke \
+        else rng.integers(64, 256, n_utts)
 
     dense = ServeEngine(cfg, params, max_len=max_new + 8, quant="none",
                         eos_id=-1)
@@ -54,11 +59,22 @@ def run(n_utts: int = 5, max_new: int = 8) -> dict:
                            "speed", "delta"]))
     print(f"mean token delta: {mean_delta*100:.2f}% (paper: 0.13%)")
     out = {"utterances": per_utt, "mean_delta": mean_delta,
-           "paper_mean_delta": 0.0013,
+           "paper_mean_delta": 0.0013, "smoke": smoke,
            "offload_rate": q8.offload.stats.offload_rate()}
     save("multi_utterance", out)
     return out
 
 
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-utts", type=int, default=5)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced smoke config + short utterances")
+    args = ap.parse_args(argv)
+    run(n_utts=args.n_utts, max_new=args.max_new, smoke=args.smoke)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

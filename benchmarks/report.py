@@ -42,6 +42,8 @@ BENCHMARK_INDEX = [
      "engine-on vs engine-off decode tokens/s (jit-purity gate)"),
     ("multi_utterance", "Table 4/5",
      "multi-utterance latency + transcript agreement"),
+    ("continuous_batching", "§5.1 E2E / DESIGN.md §11",
+     "continuous vs static batching under Poisson arrivals"),
 ]
 
 

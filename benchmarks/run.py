@@ -11,9 +11,9 @@ import time
 import traceback
 
 from benchmarks import (
-    burst_sweep, coverage_cdf, decode_throughput, exec_breakdown,
-    lmm_latency, lmm_power, multi_utterance, pdp_cross_platform,
-    profile_shares, q8_reconstruction, tune_sweep)
+    burst_sweep, continuous_batching, coverage_cdf, decode_throughput,
+    exec_breakdown, lmm_latency, lmm_power, multi_utterance,
+    pdp_cross_platform, profile_shares, q8_reconstruction, tune_sweep)
 
 SUITES = [
     ("q8_reconstruction (§4.2)", q8_reconstruction.run, False),
@@ -28,6 +28,8 @@ SUITES = [
      False),
     ("profile_shares (Fig 4)", profile_shares.run, True),
     ("multi_utterance (Table 4/5)", multi_utterance.run, True),
+    ("continuous_batching (§5.1 / DESIGN.md §11)", continuous_batching.run,
+     True),
 ]
 
 

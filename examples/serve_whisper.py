@@ -4,12 +4,19 @@ path, reporting per-request latency and PDP/EDP — the deployment the paper
 targets, on the TPU-native stack.
 
   PYTHONPATH=src python examples/serve_whisper.py [--requests 4] [--dense]
+                                                  [--stream]
 
 Flow per the paper's Fig 1: mel frames -> encoder (once per utterance) ->
 per-layer cross-K/V projection (dec.cross.kv) -> autoregressive greedy
 decode against the self-attention KV cache. Every GEMM routes through the
 offload dispatcher: main segments on the (interpret-mode) Pallas kernels,
 residuals on the host path, with coverage-based fallback.
+
+``--stream`` serves the same utterances through the continuous-batching
+scheduler (DESIGN.md §11) instead: requests are submitted STAGGERED —
+half up front, the rest arriving while earlier utterances are mid-decode
+— admitted into freed slots of the fixed-shape KV pool between jitted
+steps, and each token prints the moment its request produces it.
 """
 import argparse
 import os
@@ -34,6 +41,11 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--dense", action="store_true",
                     help="FP16/bf16 baseline instead of Q8_0")
+    ap.add_argument("--stream", action="store_true",
+                    help="continuous-batching scheduler with staggered "
+                         "submission + per-token streaming (DESIGN.md §11)")
+    ap.add_argument("--slots", type=int, default=2,
+                    help="slot-pool width for --stream")
     args = ap.parse_args(argv)
 
     cfg = get_config("whisper-tiny")
@@ -61,9 +73,41 @@ def main(argv=None):
     mel = rng.standard_normal(
         (args.requests, args.frames, cfg.n_mels)).astype(np.float32)
 
-    print(f"\ntranscribing {args.requests} utterances "
-          f"({args.frames} frames each, {quant} path)...")
-    results = engine.transcribe(mel, max_new=args.max_new)
+    if args.stream:
+        # Continuous batching (DESIGN.md §11): half the utterances are
+        # queued up front; the rest are submitted between decode steps —
+        # they land in slots freed by earlier evictions while the batch
+        # keeps stepping, and every token streams as soon as it exists.
+        sched = engine.scheduler(n_slots=args.slots, n_frames=args.frames)
+        half = max(1, args.requests // 2)
+        rids = [sched.submit(mel[i:i + 1], max_new=args.max_new)
+                for i in range(half)]
+        late = list(range(half, args.requests))
+        print(f"\nstreaming {args.requests} utterances through "
+              f"{args.slots} slots ({half} queued, {len(late)} arriving "
+              f"mid-decode, {quant} path)...")
+
+        def on_token(ev):
+            print(f"  [stream] utt{ev.rid} step {ev.step}: token "
+                  f"{ev.token}{'  <eos/budget>' if ev.done else ''}")
+
+        while sched.n_queued or sched.n_active or late:
+            sched.admit()
+            for ev in sched.decode_step():
+                on_token(ev)
+            if late:                      # staggered arrival mid-decode
+                i = late.pop(0)
+                rids.append(sched.submit(mel[i:i + 1],
+                                         max_new=args.max_new))
+                print(f"  [arrive] utt{rids[-1]} submitted mid-decode")
+        got = sched.finished
+        results = [got[r] for r in rids]
+        print(f"zero retraces after warmup: "
+              f"{sched.step_traces} step trace(s) total")
+    else:
+        print(f"\ntranscribing {args.requests} utterances "
+              f"({args.frames} frames each, {quant} path)...")
+        results = engine.transcribe(mel, max_new=args.max_new)
     for i, r in enumerate(results):
         print(f"  utt{i}: {r.steps} tokens | prefill {r.prefill_s:.2f}s "
               f"decode {r.decode_s:.2f}s | PDP {r.pdp_j():.1f} J "

@@ -145,11 +145,26 @@ class DispatchPlan:
         }
 
 
+def plan_key(phase: str, quant: Optional[str], batch: int,
+             *extra: Hashable) -> Tuple[Hashable, ...]:
+    """Canonical plan-cache key: ``(phase, quant, batch, *extra)``.
+
+    One key family serves both serving modes (DESIGN.md §11.3): a
+    slot-batched continuous-batching step at pool width ``B`` and frame
+    capacity ``F`` is the *same* traced program as a static-batch decode
+    step at ``(B, F)`` — routing depends only on static shapes — so the
+    scheduler (serve/scheduler.py) and the one-shot ``transcribe``/
+    ``generate`` paths build identical keys and share ``PlanCache``
+    entries instead of re-recording.
+    """
+    return (phase, quant, batch, *extra)
+
+
 @dataclass
 class PlanCache:
-    """Plans keyed by ``(phase, batch, seq, quant)``-style tuples so
-    steady-state serving resolves routing with one dict hit and zero
-    re-tracing (DESIGN.md §10.3)."""
+    """Plans keyed by ``plan_key``-built ``(phase, quant, batch, ...)``
+    tuples so steady-state serving resolves routing with one dict hit and
+    zero re-tracing (DESIGN.md §10.3)."""
     plans: Dict[Hashable, DispatchPlan] = field(default_factory=dict)
     hits: int = 0
     misses: int = 0

@@ -3,6 +3,11 @@
 Boots the ServeEngine with the paper's Q8_0 offload path and runs a batch
 of synthetic requests, reporting latency + PDP/EDP per request (the
 paper's Table 5 / Fig 9 quantities under the TDP-normalized power model).
+
+``--continuous`` serves the same requests through the slot-pool
+continuous-batching scheduler instead (DESIGN.md §11): staggered
+admission into a fixed-width slot batch, per-request eviction, streamed
+tokens, and exact per-request ledger/PDP attribution.
 """
 from __future__ import annotations
 
@@ -26,6 +31,11 @@ def main(argv=None):
     ap.add_argument("--quant", default="q8_0", choices=["none", "q8_0"])
     ap.add_argument("--offload", action="store_true",
                     help="route GEMMs through the offload dispatcher")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching scheduler (DESIGN.md §11) "
+                         "instead of one static batch")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="slot-pool width for --continuous")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -42,10 +52,30 @@ def main(argv=None):
     if cfg.family == "audio":
         mel = rng.standard_normal(
             (args.requests, 64, cfg.n_mels)).astype(np.float32)
-        results = engine.transcribe(mel, max_new=args.max_new)
+        payloads = [mel[i:i + 1] for i in range(args.requests)]
     else:
         prompts = rng.integers(
             0, cfg.vocab_size, (args.requests, 8)).astype(np.int32)
+        payloads = [prompts[i:i + 1] for i in range(args.requests)]
+
+    if args.continuous:
+        sched = engine.scheduler(n_slots=args.slots,
+                                 n_frames=64 if cfg.family == "audio"
+                                 else None)
+        rids = [sched.submit(p, max_new=args.max_new) for p in payloads]
+        streamed = {r: 0 for r in rids}
+
+        def on_token(ev):
+            streamed[ev.rid] += 1
+
+        got = sched.run(on_token=on_token)
+        results = [got[r] for r in rids]
+        print(f"continuous batching: {args.slots} slots, "
+              f"{sum(streamed.values())} tokens streamed, "
+              f"{sched.step_traces} step trace(s)")
+    elif cfg.family == "audio":
+        results = engine.transcribe(mel, max_new=args.max_new)
+    else:
         results = engine.generate(prompts, max_new=args.max_new)
 
     for i, r in enumerate(results):

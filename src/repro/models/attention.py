@@ -278,9 +278,13 @@ def attention(p: dict, cfg: ModelConfig, x: jax.Array, *,
 # KV-cache decode
 # ---------------------------------------------------------------------------
 class KVCache(NamedTuple):
+    """``length`` is scalar int32 for lockstep batches (every row at the
+    same position) or per-row ``(B,)`` int32 in the slot-pool layout
+    (DESIGN.md §11.1), where continuous batching keeps each slot at its
+    own decode position inside one fixed-shape batch."""
     k: jax.Array          # (B, S_max, Hkv, D)
     v: jax.Array          # (B, S_max, Hkv, D)
-    length: jax.Array     # scalar int32 — tokens currently valid
+    length: jax.Array     # () or (B,) int32 — tokens currently valid
 
     @classmethod
     def zeros(cls, b: int, s_max: int, hkv: int, hd: int, dtype=jnp.bfloat16):
@@ -325,6 +329,20 @@ def dequantize_kv(qs: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
     return (qs.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
+def _cache_update(buf: jax.Array, val: jax.Array,
+                  length: jax.Array) -> jax.Array:
+    """Write one new entry per row at that row's position. ``length``
+    scalar: every row writes at the same index (lockstep batch).
+    ``length`` (B,): per-row write positions — the slot-pool layout
+    (DESIGN.md §11.1), vmapped so each slot advances independently."""
+    val = val.astype(buf.dtype)
+    if length.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, val, length, axis=1)
+    return jax.vmap(
+        lambda b, v, p: jax.lax.dynamic_update_slice_in_dim(b, v, p, axis=0)
+    )(buf, val, length)
+
+
 def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array,
                      cache: KVCache, *,
                      memory_kv: Optional[tuple] = None,
@@ -333,6 +351,10 @@ def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array,
 
     memory_kv: precomputed (k, v) encoder projections for cross-attention
     (whisper's dec.cross.kv — computed once per utterance, paper §3 Fig 1).
+
+    ``cache.length`` may be scalar (lockstep batch) or per-row ``(B,)``
+    (slot-pool layout, DESIGN.md §11.1); each row then reads/writes its
+    own position so slots at different decode depths share one batch.
     """
     b = x.shape[0]
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -341,8 +363,10 @@ def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array,
     if memory_kv is None:
         knew = _split_heads(layers.linear(p["k"], x, engine, "dec.attn.k"), hkv)
         vnew = _split_heads(layers.linear(p["v"], x, engine, "dec.attn.v"), hkv)
+        per_row = cache.length.ndim == 1
         if cfg.pos_embedding == "rope":
-            pos = cache.length[None, None]
+            pos = (cache.length[:, None] if per_row
+                   else cache.length[None, None])
             q = layers.apply_rope(q, pos, cfg.rope_theta)
             knew = layers.apply_rope(knew, pos, cfg.rope_theta)
         if isinstance(cache, QKVCache):
@@ -350,20 +374,19 @@ def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array,
             # scales, dequantize inline before the MACs (paper-style)
             kq, ks = quantize_kv(knew)
             vq, vs = quantize_kv(vnew)
-            upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
-                buf, val.astype(buf.dtype), cache.length, axis=1)
+            upd = lambda buf, val: _cache_update(buf, val, cache.length)
             new_cache = QKVCache(upd(cache.k_qs, kq), upd(cache.v_qs, vq),
                                  upd(cache.k_scale, ks),
                                  upd(cache.v_scale, vs), cache.length + 1)
             k = dequantize_kv(new_cache.k_qs, new_cache.k_scale, x.dtype)
             v = dequantize_kv(new_cache.v_qs, new_cache.v_scale, x.dtype)
         else:
-            k = jax.lax.dynamic_update_slice_in_dim(
-                cache.k, knew.astype(cache.k.dtype), cache.length, axis=1)
-            v = jax.lax.dynamic_update_slice_in_dim(
-                cache.v, vnew.astype(cache.v.dtype), cache.length, axis=1)
+            k = _cache_update(cache.k, knew, cache.length)
+            v = _cache_update(cache.v, vnew, cache.length)
             new_cache = KVCache(k, v, cache.length + 1)
-        valid = jnp.arange(k.shape[1]) <= cache.length
+        pos_idx = jnp.arange(k.shape[1])
+        valid = (pos_idx[None, :] <= cache.length[:, None] if per_row
+                 else pos_idx <= cache.length)
     else:
         k, v = memory_kv
         new_cache = cache
@@ -388,7 +411,9 @@ def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array,
     logits = ctx.constrain(logits, "batch", "model" if kv_sharded else None,
                            None, None, s_tok)
     if valid is not None:
-        logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+        vmask = (valid[:, None, None, None, :] if valid.ndim == 2
+                 else valid[None, None, None, None, :])
+        logits = jnp.where(vmask, logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgqs,bshd->bqhgd", probs.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)

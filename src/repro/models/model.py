@@ -25,9 +25,21 @@ from repro.sharding import ctx
 
 
 class ServeState(NamedTuple):
-    """Decode-state wrapper uniform across families."""
+    """Decode-state wrapper uniform across families.
+
+    Two layouts share this type (DESIGN.md §11.1):
+      standard — ``step`` and the per-layer cache ``length`` counters are
+        scalars; every batch row decodes in lockstep (generate/transcribe).
+      slot     — counters are per-slot vectors (``step``: (B,), stacked
+        lengths: (R, B)) so each slot of a continuous-batching pool sits
+        at its own position inside one fixed-shape batch.
+    ``slot_layout`` converts standard -> slot; data leaves are identical
+    in both (counters aside, every layer_states leaf carries the batch on
+    axis 1, after the layer-stack axis — the invariant the slot-pool
+    splice in serve/kvcache.py relies on).
+    """
     layer_states: Any     # list per pattern position (LM) | WhisperDecodeState
-    step: jax.Array       # scalar i32 — absolute position of the next token
+    step: jax.Array       # () or (B,) i32 — absolute position of next token
 
 
 def _dtype(cfg: ModelConfig):
@@ -185,6 +197,40 @@ def loss_fn(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
 # ---------------------------------------------------------------------------
 # Serving
 # ---------------------------------------------------------------------------
+def slot_layout(state: ServeState, batch: int) -> ServeState:
+    """Standard -> slot layout (DESIGN.md §11.1): broadcast the scalar
+    step/length counters to per-slot vectors so each row of a fixed-shape
+    slot pool tracks its own decode position.
+
+    The leaf rule is structural: counters are the only ``ndim <= 1``
+    leaves of a decode state — ``()`` (an unstacked length / ServeState
+    ``step``) broadcasts to ``(batch,)``, ``(R,)`` (a layer-stacked
+    length) to ``(R, batch)``. Every data leaf (KV buffers, SSM states,
+    whisper cross-KV) is ``ndim >= 3`` with the batch on axis 1 and
+    passes through untouched. Idempotent on already-slot-layout states.
+    """
+    def conv(a):
+        if a.ndim == 0:
+            return jnp.broadcast_to(a, (batch,))
+        if a.ndim == 1:
+            return jnp.broadcast_to(a[:, None], (a.shape[0], batch))
+        return a
+
+    step = (jnp.broadcast_to(state.step, (batch,)) if state.step.ndim == 0
+            else state.step)
+    return ServeState(
+        layer_states=jax.tree_util.tree_map(conv, state.layer_states),
+        step=step)
+
+
+def slot_batch_axis(leaf_is_step: bool) -> int:
+    """Batch axis of a slot-layout leaf for the pool splice
+    (serve/kvcache.py): ``ServeState.step`` is ``(B,)`` -> axis 0; every
+    ``layer_states`` leaf — data and ``(R, B)`` counters alike — carries
+    the batch on axis 1 after the layer-stack axis."""
+    return 0 if leaf_is_step else 1
+
+
 def init_serve_state(params: dict, cfg: ModelConfig, batch: int, max_len: int,
                      *, memory: Optional[jax.Array] = None, engine=None,
                      prefill_len: int = 0) -> ServeState:

@@ -211,11 +211,20 @@ def init_whisper_decode_state(params: dict, cfg: ModelConfig, memory: jax.Array,
 def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                 state: WhisperDecodeState, *, engine=None
                 ) -> Tuple[jax.Array, WhisperDecodeState]:
-    """token: (B, 1) int32 -> (logits (B, 1, V), state')."""
+    """token: (B, 1) int32 -> (logits (B, 1, V), state').
+
+    Positions come from the layer-0 self-KV length: scalar for a lockstep
+    batch, per-row ``(B,)`` in the slot-pool layout (DESIGN.md §11.1) —
+    each slot then reads its own learned positional embedding row."""
     x = layers.embed(params["embed"], token)
-    pos = state.self_kv.length[0] if state.self_kv.length.ndim else state.self_kv.length
-    x = x + jax.lax.dynamic_slice_in_dim(
-        params["dec_pos"]["table"], pos, 1, axis=0).astype(x.dtype)
+    pos = (state.self_kv.length[0] if state.self_kv.length.ndim
+           else state.self_kv.length)
+    table = params["dec_pos"]["table"]
+    if pos.ndim:                                    # per-slot positions (B,)
+        x = x + jnp.take(table, pos, axis=0)[:, None].astype(x.dtype)
+    else:
+        x = x + jax.lax.dynamic_slice_in_dim(table, pos, 1,
+                                             axis=0).astype(x.dtype)
 
     def body(x, xs):
         p, kv, ck, cv = xs

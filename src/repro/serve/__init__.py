@@ -1,1 +1,5 @@
 from repro.serve.engine import GenerationResult, ServeEngine  # noqa: F401
+from repro.serve.kvcache import (  # noqa: F401
+    SlotKVPool, slot_insert, slot_reset)
+from repro.serve.scheduler import (  # noqa: F401
+    ContinuousBatchingScheduler, TokenEvent)

@@ -17,15 +17,22 @@ Offload accounting comes from ``DispatchPlan``s recorded per
 them) and committed to the host-side ``OffloadLedger`` multiplied by the
 executed step counts.
 
-Request flow:
-  submit(prompt)/submit_audio(mel) -> queued
-  run() -> batches queued requests (padding to the batch size), prefills,
-           then decodes greedily until EOS/max_new_tokens, recording
-           wall-time and PDP per request.
+Request flow (DESIGN.md §11):
+  submit(prompt)/submit_audio(mel) -> queued on the continuous-batching
+           scheduler (serve/scheduler.py)
+  run() -> admits queued requests into freed slots of the fixed-shape
+           KV-cache pool *between* jitted decode steps, evicts on
+           EOS/max_new, streams tokens as produced, and records wall-time
+           and PDP per request.
+``generate()``/``transcribe()`` remain the one-shot static-batch path —
+prefill the whole batch, decode run-to-completion — used by callers that
+already hold a full batch.
 
 Token contract: ``GenerationResult.tokens`` holds exactly the ``steps``
-*generated* tokens, for both ``generate()`` and ``transcribe()`` — prompt
-tokens (and the SOT token) are never included.
+tokens *this request generated*, for both paths — prompt tokens (and the
+SOT token) are never included, and rows that hit EOS before the batch
+drained are truncated at their first EOS with ``steps`` reported
+per-request (not the batch-global step count).
 """
 from __future__ import annotations
 
@@ -40,7 +47,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import energy
 from repro.core.offload import OffloadEngine
-from repro.core.plan import DispatchPlan, PlanCache, record_plan
+from repro.core.plan import DispatchPlan, PlanCache, plan_key, record_plan
 from repro.core.qformats import quantize_tree
 from repro.models import model as model_lib
 from repro.models import whisper as whisper_lib
@@ -89,6 +96,8 @@ class ServeEngine:
     eos_id: Optional[int] = 0
     _serve_params: Any = field(default=None, repr=False)
     _decode_jit: Any = field(default=None, repr=False)
+    _step_traces: int = field(default=0, repr=False)
+    _scheduler: Any = field(default=None, repr=False)
 
     def __post_init__(self):
         q = self.quant if self.quant is not None else self.cfg.quant
@@ -125,7 +134,13 @@ class ServeEngine:
         def step_fn(params, token, done, state):
             """One greedy decode step with an on-device done-mask: emit
             the argmax token and fold its EOS test into ``done`` without
-            leaving the device."""
+            leaving the device. Shape-stable across both serving modes —
+            the continuous-batching scheduler drives the SAME compiled
+            step at its pool width (DESIGN.md §11.2). The trace counter
+            increments only when jax re-traces (host code runs at trace
+            time), which is how tests and the continuous_batching
+            benchmark assert zero retraces after warmup."""
+            self._step_traces += 1
             logits, state = decode_fn(params, token, state)
             nxt = self._argmax(logits[:, -1])[:, None]
             done = done | (nxt[:, 0] == eos)
@@ -193,6 +208,26 @@ class ServeEngine:
         return {"tokens": out, "decode_s": time.perf_counter() - t0,
                 "steps": steps, "state": state}
 
+    def _finalize(self, r: Dict[str, Any], prefill_s: float
+                  ) -> List[GenerationResult]:
+        """Per-request results from a batch greedy loop: each row is
+        truncated at its first EOS (inclusive — matching what a batch-1
+        run of the same request returns) and ``steps`` is that row's own
+        generated count, NOT the batch-global step count. Rows that never
+        hit EOS keep all ``r['steps']`` tokens."""
+        out = r["tokens"]
+        b = out.shape[0]
+        eos = self.eos_id
+        results = []
+        for i in range(b):
+            row = out[i].tolist()
+            if eos is not None and eos in row:
+                row = row[:row.index(eos) + 1]
+            results.append(GenerationResult(
+                tokens=row, prefill_s=prefill_s / b,
+                decode_s=r["decode_s"] / b, steps=len(row)))
+        return results
+
     # ------------------------------------------------------------------
     def generate(self, prompts: np.ndarray, max_new: int = 32
                  ) -> List[GenerationResult]:
@@ -202,14 +237,15 @@ class ServeEngine:
         b, s = prompts.shape
         q = self._serve_quant
         tokens = jnp.asarray(prompts)
-        prefill_plan = self._plan(("prefill", q, b, s), self._prefill_fn,
-                                  self._serve_params, tokens)
+        prefill_plan = self._plan(plan_key("prefill", q, b, s),
+                                  self._prefill_fn, self._serve_params,
+                                  tokens)
         t0 = time.perf_counter()
         logits, state = self._prefill_jit(self._serve_params, tokens)
         jax.block_until_ready(logits)
         first = self._argmax(logits[:, -1])[:, None]
         prefill_s = time.perf_counter() - t0
-        step_plan = self._plan(("step", q, b), self._decode_fn,
+        step_plan = self._plan(plan_key("step", q, b), self._decode_fn,
                                self._serve_params, first, state)
         r = self._greedy_loop(state, first, max_new)
         if self.offload is not None:
@@ -217,10 +253,7 @@ class ServeEngine:
             # runs once per prompt token
             self.offload.ledger.commit(prefill_plan, times=s)
             self.offload.ledger.commit(step_plan, times=r["steps"])
-        return [GenerationResult(
-            tokens=r["tokens"][i].tolist(),
-            prefill_s=prefill_s / b, decode_s=r["decode_s"] / b,
-            steps=r["steps"]) for i in range(b)]
+        return self._finalize(r, prefill_s)
 
     def transcribe(self, mel: np.ndarray, sot_id: int = 1,
                    max_new: int = 32) -> List[GenerationResult]:
@@ -244,23 +277,78 @@ class ServeEngine:
             if tuner.searches > n0:
                 tuner.save()
         mel_j = jnp.asarray(mel)
-        prefill_plan = self._plan(("prefill", q, b, f), self._prefill_fn,
-                                  self._serve_params, mel_j)
+        prefill_plan = self._plan(plan_key("prefill", q, b, f),
+                                  self._prefill_fn, self._serve_params,
+                                  mel_j)
         t0 = time.perf_counter()
         memory, state = self._prefill_jit(self._serve_params, mel_j)
         jax.block_until_ready(memory)
         prefill_s = time.perf_counter() - t0
         first = jnp.full((b, 1), sot_id, jnp.int32)
-        step_plan = self._plan(("step", q, b, f), self._decode_fn,
+        step_plan = self._plan(plan_key("step", q, b, f), self._decode_fn,
                                self._serve_params, first, state)
         r = self._greedy_loop(state, first, max_new)
         if self.offload is not None:
             self.offload.ledger.commit(prefill_plan, times=1)
             self.offload.ledger.commit(step_plan, times=r["steps"])
-        return [GenerationResult(
-            tokens=r["tokens"][i].tolist(), prefill_s=prefill_s / b,
-            decode_s=r["decode_s"] / b, steps=r["steps"])
-            for i in range(b)]
+        return self._finalize(r, prefill_s)
+
+    # ------------------------------------------------------------------
+    # Continuous batching (DESIGN.md §11) — thin wrappers over the slot
+    # scheduler; generate()/transcribe() above stay the one-shot path.
+    # ------------------------------------------------------------------
+    def scheduler(self, n_slots: Optional[int] = None,
+                  n_frames: Optional[int] = None):
+        """The engine's continuous-batching scheduler. With no arguments
+        (or matching geometry) the existing scheduler is returned; an
+        explicit geometry CHANGE rebuilds the pool, refusing while the old
+        scheduler still holds queued/active requests or unclaimed results.
+        Audio engines need ``n_frames`` — the slot pool's fixed mel
+        capacity — on first creation (the submit_audio wrapper infers it
+        from the first utterance)."""
+        from repro.serve.scheduler import ContinuousBatchingScheduler
+        s = self._scheduler
+        # dimensions left as None inherit from the live scheduler — an
+        # n_frames-only change keeps the slot width and vice versa
+        want_slots = n_slots if n_slots is not None else \
+            (s.n_slots if s is not None else 4)
+        want_frames = n_frames if n_frames is not None else \
+            (s.n_frames if s is not None else None)
+        if (s is None or s.n_slots != want_slots
+                or s.n_frames != want_frames):
+            if s is not None and (s.n_queued or s.n_active or s.finished):
+                raise RuntimeError(
+                    "scheduler geometry change with requests in flight or "
+                    "unclaimed results — drain with run() first")
+            self._scheduler = ContinuousBatchingScheduler(
+                self, n_slots=want_slots, n_frames=want_frames)
+        return self._scheduler
+
+    def submit(self, prompt: np.ndarray, max_new: int = 32, *,
+               n_slots: Optional[int] = None) -> int:
+        """Queue one LM prompt (S,) / (1, S) on the scheduler."""
+        return self.scheduler(n_slots).submit(prompt, max_new=max_new)
+
+    def submit_audio(self, mel: np.ndarray, max_new: int = 32, *,
+                     n_slots: Optional[int] = None,
+                     n_frames: Optional[int] = None, sot_id: int = 1) -> int:
+        """Queue one utterance (F, n_mels) / (1, F, n_mels); padded to the
+        pool's frame capacity. ``n_frames`` fixes that capacity on first
+        call — omitted, it is inferred from this utterance's frame count
+        (later, longer utterances then need a fresh scheduler)."""
+        if self._scheduler is None and n_frames is None:
+            arr = np.asarray(mel)
+            n_frames = int(arr.shape[0] if arr.ndim == 2 else arr.shape[1])
+        return self.scheduler(n_slots, n_frames).submit(
+            mel, max_new=max_new, sot_id=sot_id)
+
+    def run(self, on_token=None) -> Dict[int, GenerationResult]:
+        """Drain the scheduler: admit/decode/evict until queue and slots
+        are empty, streaming tokens through ``on_token``. Returns
+        {request id: GenerationResult}."""
+        if self._scheduler is None:
+            return {}
+        return self._scheduler.run(on_token=on_token)
 
     # ------------------------------------------------------------------
     def energy_report(self, results: List[GenerationResult],

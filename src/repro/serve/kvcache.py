@@ -1,0 +1,141 @@
+"""Fixed-shape slot KV-cache pool for continuous batching (DESIGN.md §11.1).
+
+The pool preallocates ONE slot-layout decode state of static width
+``n_slots`` (and, for whisper, static frame capacity ``n_frames``) at
+construction, and never reshapes it: admission and eviction are pure
+``jax.lax.dynamic_update_*`` splices along the batch axis, so the jitted
+decode ``step_fn`` of serve/engine.py keeps seeing one shape forever —
+zero retraces across any admission/eviction schedule (the property
+tests/test_scheduler.py regression-gates, in the style of
+tests/test_plan.py).
+
+Ops (all jit-compiled once per pool shape, shared module-level caches):
+
+  slot_insert(pool, slot, req)  splice a single-request prefill state
+                                (whisper encoder + cross-KV, or LM prompt
+                                scan — standard layout, batch 1) into live
+                                slot ``slot``; counters land as per-slot
+                                vectors via ``model.slot_layout``.
+  slot_reset(pool, slot)        zero the slot row (KV buffers + counters)
+                                on eviction, bounding the free slot's
+                                counter drift between occupants.
+
+Free slots keep decoding garbage — that is the fixed-shape contract (the
+batch always computes all ``n_slots`` rows; the paper's CGLA keeps its
+lanes busy the same way) — and every insert overwrites the entire slot
+row, so stale state can never leak into a new request.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.models.model import ServeState
+
+
+def slot_insert(pool: ServeState, slot: jax.Array,
+                req: ServeState) -> ServeState:
+    """Pure slot splice: write single-request decode state ``req``
+    (standard layout, batch 1) into row ``slot`` of the slot-layout
+    ``pool``. jit-safe: ``slot`` may be traced; every leaf updates via
+    ``jax.lax.dynamic_update_slice_in_dim`` on its batch axis
+    (``model.slot_batch_axis``)."""
+    req = model_lib.slot_layout(req, 1)
+
+    def upd(p, r):
+        return jax.lax.dynamic_update_slice_in_dim(
+            p, r.astype(p.dtype), slot, axis=model_lib.slot_batch_axis(False))
+
+    step = jax.lax.dynamic_update_slice_in_dim(
+        pool.step, req.step.astype(pool.step.dtype), slot,
+        axis=model_lib.slot_batch_axis(True))
+    return ServeState(
+        layer_states=jax.tree_util.tree_map(upd, pool.layer_states,
+                                            req.layer_states),
+        step=step)
+
+
+def slot_reset(pool: ServeState, slot: jax.Array) -> ServeState:
+    """Pure slot clear: zero row ``slot`` of every leaf (KV buffers,
+    counters, step). Not required for correctness — ``slot_insert``
+    overwrites the whole row — but it pins freed slots' per-slot counters
+    back to 0 so an idle slot's position never drifts toward the cache
+    horizon between occupants."""
+    def zero(p):
+        ax = model_lib.slot_batch_axis(False)
+        shape = p.shape[:ax] + (1,) + p.shape[ax + 1:]
+        return jax.lax.dynamic_update_slice_in_dim(
+            p, jnp.zeros(shape, p.dtype), slot, axis=ax)
+
+    step = jax.lax.dynamic_update_slice_in_dim(
+        pool.step, jnp.zeros((1,), pool.step.dtype), slot,
+        axis=model_lib.slot_batch_axis(True))
+    return ServeState(
+        layer_states=jax.tree_util.tree_map(zero, pool.layer_states),
+        step=step)
+
+
+# Module-level jits: shared across every pool instance, so repeatedly
+# constructing schedulers (tests, benchmarks) re-traces only on a genuinely
+# new pool shape.
+_INSERT_JIT = jax.jit(slot_insert)
+_RESET_JIT = jax.jit(slot_reset)
+
+
+class SlotKVPool:
+    """The preallocated slot pool + host-side free-slot bookkeeping.
+
+    ``state`` is a slot-layout ``ServeState`` of static shape
+    ``(n_slots, max_len, ...)`` built once at construction (for whisper,
+    the cross-KV rows are sized to the fixed ``n_frames`` capacity every
+    admitted utterance is padded to). ``acquire``/``release`` manage the
+    free list; ``insert`` is the splice a scheduler calls on admission.
+    """
+
+    def __init__(self, cfg, params, n_slots: int, max_len: int,
+                 n_frames: Optional[int] = None):
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.n_frames = n_frames
+        dtype = model_lib._dtype(cfg)
+        if cfg.family == "audio":
+            if n_frames is None:
+                raise ValueError("audio slot pool needs a fixed n_frames "
+                                 "capacity (utterances are padded to it)")
+            # zeros memory only shapes the cross-KV rows; insert()
+            # overwrites them with the request's real prefill state.
+            # engine=None: pool init must not touch the offload ledger.
+            memory = jnp.zeros((n_slots, n_frames, cfg.d_model), dtype)
+            st = model_lib.init_serve_state(params, cfg, n_slots, max_len,
+                                            memory=memory, engine=None)
+        else:
+            st = model_lib.init_serve_state(params, cfg, n_slots, max_len)
+        self.state: ServeState = model_lib.slot_layout(st, n_slots)
+        self._free: List[int] = list(range(n_slots))
+
+    # -- free-slot bookkeeping (host side) -----------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def acquire(self) -> int:
+        """Claim the lowest free slot index (raises when full)."""
+        return self._free.pop(0)
+
+    def release(self, slot: int, reset: bool = True) -> None:
+        """Return ``slot`` to the free list. ``reset=False`` skips zeroing
+        the row — safe because ``insert`` overwrites the entire slot before
+        reuse and freed slots' garbage is never read (the scheduler's hot
+        path uses it; a reset is a full pool-state copy per eviction)."""
+        if reset:
+            self.state = _RESET_JIT(self.state, slot)
+        self._free.append(slot)
+        self._free.sort()
+
+    # -- state ops ------------------------------------------------------
+    def insert(self, slot: int, req_state: ServeState) -> None:
+        """Splice a batch-1 prefill state into ``slot`` (jitted)."""
+        self.state = _INSERT_JIT(self.state, slot, req_state)

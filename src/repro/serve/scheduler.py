@@ -1,0 +1,294 @@
+"""Continuous-batching serve scheduler (DESIGN.md §11).
+
+``ServeEngine.generate``/``transcribe`` decode static run-to-completion
+batches: finished utterances keep burning jitted steps and new arrivals
+head-of-line block until the whole batch drains — exactly the utilization
+loss the paper's sustained multi-utterance evaluation (and the ROADMAP's
+heavy-traffic north star) forbids. This scheduler decodes a fixed-width
+slot batch instead (width ``n_slots`` static, so the engine's jitted
+``step_fn`` and its ``PlanCache``/ledger machinery keep working with zero
+retraces), admits queued requests into freed slots *between* steps, evicts
+on EOS/max_new, and streams per-request tokens as they are produced.
+
+Mechanics per step (DESIGN.md §11.2):
+  admit   — one jitted batch-1 prefill per queued request (whisper
+            encoder + cross-KV, or LM prompt scan), spliced into a free
+            slot by ``kvcache.slot_insert``; prefill wall-time and its
+            dispatch-plan ledger commit are attributed to that request
+            exactly.
+  decode  — ONE execution of the engine's fixed-shape ``step_fn`` over
+            all ``n_slots`` rows (free slots compute garbage — the
+            fixed-shape contract); its plan commits once per executed
+            step, and its wall-time is split over the slots active that
+            step, so per-request PDP attribution is exact-by-steps-lived
+            rather than batch-averaged, and per-request totals sum to the
+            batch total (DESIGN.md §11.3).
+  evict   — EOS or ``max_new`` reached: the request's ``GenerationResult``
+            is finalized from its per-slot step counter and the slot is
+            returned to the free list (its row is overwritten whole by
+            the next admission; ``kvcache.slot_reset`` exists for callers
+            that want freed rows zeroed eagerly).
+
+Plan keys are shared with the one-shot paths via ``core.plan.plan_key``
+(DESIGN.md §11.3): the slot-batched step at ``(n_slots, n_frames)`` IS
+the static decode step at that shape, so no plan is ever re-recorded.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import plan_key
+from repro.serve.engine import GenerationResult, ServeEngine
+from repro.serve.kvcache import SlotKVPool
+
+
+@dataclass
+class TokenEvent:
+    """One streamed token: produced by request ``rid`` at its (1-based)
+    per-request step ``step``; ``done`` marks the request's last token."""
+    rid: int
+    token: int
+    step: int
+    done: bool
+
+
+@dataclass
+class _QueuedRequest:
+    rid: int
+    payload: np.ndarray          # (1, F, n_mels) mel | (1, S) i32 prompt
+    max_new: int
+    sot_id: int = 1
+
+
+@dataclass
+class _ActiveSlot:
+    rid: int
+    max_new: int
+    tokens: List[int] = field(default_factory=list)
+    steps: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+
+class ContinuousBatchingScheduler:
+    """Slot-batched continuous decode over a ``ServeEngine``.
+
+    The engine supplies the jitted prefill/step functions, the serving
+    params, the plan cache, and the offload ledger; the scheduler owns the
+    ``SlotKVPool``, the admission queue, and per-request attribution.
+    ``n_frames`` (audio only) fixes the pool's mel-frame capacity —
+    admitted utterances are zero-padded to it so prefill and the slot
+    splice see one static shape (real Whisper pads every utterance to the
+    30 s window the same way).
+    """
+
+    def __init__(self, engine: ServeEngine, n_slots: int = 4,
+                 n_frames: Optional[int] = None):
+        self.engine = engine
+        self.n_slots = n_slots
+        cfg = engine.cfg
+        self._audio = cfg.family == "audio"
+        if self._audio and n_frames is None:
+            raise ValueError("audio scheduler needs n_frames (the pool's "
+                             "fixed mel-frame capacity)")
+        self.n_frames = n_frames
+        self.pool = SlotKVPool(cfg, engine._serve_params, n_slots,
+                               engine.max_len, n_frames=n_frames)
+        self.queue: Deque[_QueuedRequest] = deque()
+        self.finished: Dict[int, GenerationResult] = {}
+        self._active: Dict[int, _ActiveSlot] = {}      # slot -> request
+        # device-resident next-token buffer: decode feeds the previous
+        # step's output back without a host->device upload per step
+        self._tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        self._done0 = jnp.zeros((n_slots,), bool)      # step_fn done input
+        self._next_rid = 0
+        self._step_plan_ready = False
+        self._step_plan = None
+        # independently accumulated busy wall-time (every prefill + every
+        # batch step, measured whole): the other side of the §11.3
+        # attribution invariant, NOT derived from per-request shares.
+        # _claimed_s is the busy time of results already handed out by
+        # run(), so attribution stays exact across claim cycles.
+        self._busy_s = 0.0
+        self._claimed_s = 0.0
+
+    # -- queue ----------------------------------------------------------
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self.queue)
+
+    @property
+    def step_traces(self) -> int:
+        """How often the engine's decode step_fn was traced — stays at 1
+        after warmup for any admission schedule (tests/test_scheduler.py)."""
+        return self.engine._step_traces
+
+    def submit(self, payload: np.ndarray, max_new: int = 32,
+               sot_id: int = 1) -> int:
+        """Queue one request; returns its request id. ``payload`` is a
+        mel (F, n_mels) / (1, F, n_mels) for audio engines (padded to the
+        pool's ``n_frames``) or an int prompt (S,) / (1, S) for LMs."""
+        arr = np.asarray(payload)
+        if arr.ndim == (2 if self._audio else 1):
+            arr = arr[None]
+        if self._audio:
+            f = arr.shape[1]
+            if f > self.n_frames:
+                raise ValueError(f"utterance has {f} frames > pool "
+                                 f"capacity {self.n_frames}")
+            if f < self.n_frames:
+                arr = np.pad(arr, ((0, 0), (0, self.n_frames - f), (0, 0)))
+        rid = self._next_rid
+        self._next_rid += 1
+        if max_new <= 0:
+            # zero-budget requests finish immediately with the empty
+            # result the one-shot path returns for max_new=0 — they never
+            # occupy a slot (and skip the pointless prefill)
+            self.finished[rid] = GenerationResult(tokens=[], prefill_s=0.0,
+                                                  decode_s=0.0, steps=0)
+            return rid
+        self.queue.append(_QueuedRequest(rid, arr, max_new, sot_id))
+        return rid
+
+    # -- admission ------------------------------------------------------
+    def admit(self) -> List[int]:
+        """Admit queued requests into free slots (one jitted batch-1
+        prefill each, spliced in-place between decode steps). Returns the
+        admitted request ids."""
+        admitted = []
+        eng = self.engine
+        while self.queue and self.pool.n_free:
+            req = self.queue.popleft()
+            q = eng._serve_quant
+            payload = jnp.asarray(req.payload)
+            if self._audio:
+                key = plan_key("prefill", q, 1, self.n_frames)
+                times = 1
+            else:
+                key = plan_key("prefill", q, 1, payload.shape[1])
+                times = payload.shape[1]
+            plan = eng._plan(key, eng._prefill_fn, eng._serve_params, payload)
+            t0 = time.perf_counter()
+            out, state = eng._prefill_jit(eng._serve_params, payload)
+            jax.block_until_ready(out)
+            if self._audio:
+                first = np.full((1,), req.sot_id, np.int32)
+            else:
+                first = np.asarray(eng._argmax(out[:, -1]))
+            prefill_s = time.perf_counter() - t0
+            self._busy_s += prefill_s
+            if eng.offload is not None:
+                eng.offload.ledger.commit(plan, times=times)
+            slot = self.pool.acquire()
+            self.pool.insert(slot, state)
+            self._tokens = self._tokens.at[slot, 0].set(int(first[0]))
+            self._active[slot] = _ActiveSlot(rid=req.rid, max_new=req.max_new,
+                                             prefill_s=prefill_s)
+            admitted.append(req.rid)
+        return admitted
+
+    # -- decode ---------------------------------------------------------
+    def _ensure_step_plan(self) -> None:
+        if self._step_plan_ready:
+            return
+        eng = self.engine
+        extra = (self.n_frames,) if self._audio else ()
+        key = plan_key("step", eng._serve_quant, self.n_slots, *extra)
+        token = jnp.zeros((self.n_slots, 1), jnp.int32)
+        self._step_plan = eng._plan(key, eng._decode_fn, eng._serve_params,
+                                    token, self.pool.state)
+        self._step_plan_ready = True
+
+    def decode_step(self) -> List[TokenEvent]:
+        """One fixed-shape batch decode step: every slot advances (free
+        slots compute garbage that is never read), active slots emit their
+        next token, finished requests are evicted. Returns the step's
+        ``TokenEvent`` stream in slot order."""
+        if not self._active:
+            return []
+        self._ensure_step_plan()
+        eng = self.engine
+        t0 = time.perf_counter()
+        nxt, _, state = eng._step_jit(eng._serve_params, self._tokens,
+                                      self._done0, self.pool.state)
+        self.pool.state = state
+        self._tokens = nxt
+        nxt_np = np.asarray(nxt)                       # host sync: streaming
+        dt = time.perf_counter() - t0
+        self._busy_s += dt
+        if eng.offload is not None:
+            eng.offload.ledger.commit(self._step_plan, times=1)
+        share = dt / len(self._active)
+        eos = eng.eos_id
+        events = []
+        for slot in sorted(self._active):
+            a = self._active[slot]
+            tok = int(nxt_np[slot, 0])
+            a.tokens.append(tok)
+            a.steps += 1
+            a.decode_s += share
+            done = a.steps >= a.max_new or (eos is not None and tok == eos)
+            events.append(TokenEvent(a.rid, tok, a.steps, done))
+            if done:
+                self.finished[a.rid] = GenerationResult(
+                    tokens=a.tokens, prefill_s=a.prefill_s,
+                    decode_s=a.decode_s, steps=a.steps)
+                del self._active[slot]
+                # reset=False: insert() fully overwrites the slot on the
+                # next admission and freed rows' garbage is never read —
+                # skipping the reset saves a pool-state copy per eviction
+                self.pool.release(slot, reset=False)
+        return events
+
+    # -- drain ----------------------------------------------------------
+    def run(self, on_token: Optional[Callable[[TokenEvent], Any]] = None
+            ) -> Dict[int, GenerationResult]:
+        """Drain queue + slots to completion, streaming each token through
+        ``on_token`` as it is produced. Returns {rid: GenerationResult}
+        and CLAIMS those results — each result is handed out exactly once,
+        so a long-running submit()/run() loop holds no unbounded history
+        (results produced via manual admit()/decode_step() driving stay in
+        ``finished`` until a run() claims them)."""
+        while self.queue or self._active:
+            self.admit()
+            for ev in self.decode_step():
+                if on_token is not None:
+                    on_token(ev)
+        out = dict(self.finished)
+        self.finished.clear()
+        self._claimed_s += sum(r.total_s for r in out.values())
+        return out
+
+    # -- attribution (DESIGN.md §11.3) ----------------------------------
+    def attribution(self, power_w: Optional[float] = None) -> Dict[str, Any]:
+        """Per-request PDP attribution: each finished request's PDP from
+        its exact prefill time + its share of every step it was live for.
+        The contract: per-request PDP sums to the batch total, where the
+        batch total comes from the INDEPENDENTLY accumulated busy
+        wall-time (whole prefills + whole batch steps, never per-request
+        shares) — a mis-split in the share bookkeeping breaks the
+        equality rather than cancelling out. Exact once all requests have
+        drained (live slots still hold unfinalized shares); asserted by
+        benchmarks/continuous_batching.py and tests/test_scheduler.py.
+        Covers the UNCLAIMED results: busy time of results already handed
+        out by run() is subtracted, so the invariant holds per claim
+        window in a long-running serve loop."""
+        from repro.core import energy
+        w = energy.TPU_V5E_W if power_w is None else power_w
+        per_req = {rid: r.pdp_j(w) for rid, r in self.finished.items()}
+        window_s = self._busy_s - self._claimed_s
+        return {"per_request_pdp_j": per_req,
+                "batch_pdp_j": energy.pdp(window_s, w),
+                "busy_s": window_s,
+                "drained": not (self._active or self.queue)}

@@ -1,0 +1,382 @@
+"""Continuous-batching scheduler + slot KV-cache pool (DESIGN.md §11):
+slot-batched decode emits token streams identical to one-at-a-time
+ServeEngine decode under randomized arrival/eviction schedules, the slot
+splice ops are pure and exact, and the fixed-shape pool keeps the
+engine's decode step at zero retraces after warmup (jit-purity regression
+in the style of tests/test_plan.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hyp import given, settings, st
+
+from repro.configs.registry import get_smoke_config
+from repro.core.offload import OffloadEngine
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+from repro.serve.kvcache import SlotKVPool, slot_insert, slot_reset
+from repro.serve.scheduler import ContinuousBatchingScheduler
+
+N_FRAMES = 8
+
+
+@pytest.fixture(scope="module")
+def whisper_setup():
+    cfg = get_smoke_config("whisper-tiny")
+    params = M.init_params(jax.random.PRNGKey(0), cfg, 64)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def whisper_engine(whisper_setup):
+    cfg, params = whisper_setup
+    return ServeEngine(cfg, params, max_len=32, quant="none", eos_id=-1)
+
+
+@pytest.fixture(scope="module")
+def lm_engine():
+    cfg = get_smoke_config("qwen2.5-14b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg, 64)
+    return ServeEngine(cfg, params, max_len=32, quant="none", eos_id=-1)
+
+
+def _mels(cfg, n, rng=None):
+    rng = rng or np.random.default_rng(0)
+    return [rng.standard_normal((1, N_FRAMES, cfg.n_mels)).astype(np.float32)
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Slot layout + splice ops
+# ---------------------------------------------------------------------------
+def test_slot_layout_broadcasts_counters(whisper_setup):
+    cfg, params = whisper_setup
+    memory = jnp.zeros((3, N_FRAMES, cfg.d_model))
+    stt = M.init_serve_state(params, cfg, 3, 16, memory=memory)
+    slot = M.slot_layout(stt, 3)
+    assert slot.step.shape == (3,)
+    assert slot.layer_states.self_kv.length.shape == (cfg.num_layers, 3)
+    # data leaves untouched
+    assert slot.layer_states.self_kv.k.shape == \
+        stt.layer_states.self_kv.k.shape
+    # idempotent
+    again = M.slot_layout(slot, 3)
+    assert again.step.shape == (3,)
+    assert again.layer_states.self_kv.length.shape == (cfg.num_layers, 3)
+
+
+def test_slot_insert_and_reset_are_exact(whisper_setup):
+    """insert splices the request's state into exactly one slot row;
+    reset zeroes exactly that row — other slots bit-identical."""
+    cfg, params = whisper_setup
+    pool = SlotKVPool(cfg, params, n_slots=3, max_len=16, n_frames=N_FRAMES)
+    mel = jnp.asarray(_mels(cfg, 1)[0])
+    eng = ServeEngine(cfg, params, max_len=16, quant="none", eos_id=-1)
+    _, req = eng._prefill_jit(eng._serve_params, mel)
+    before = pool.state
+    after = slot_insert(pool.state, 1, req)
+    req_slot = M.slot_layout(req, 1)
+
+    def rows(tree, i):
+        return jax.tree_util.tree_map(lambda a: np.asarray(a[:, i]), tree)
+
+    for i in (0, 2):    # untouched slots
+        a, b = rows(after.layer_states, i), rows(before.layer_states, i)
+        jax.tree_util.tree_map(np.testing.assert_array_equal, a, b)
+    ins = rows(after.layer_states, 1)
+    src = rows(req_slot.layer_states, 0)
+    jax.tree_util.tree_map(np.testing.assert_array_equal, ins, src)
+
+    cleared = slot_reset(after, 1)
+    z = rows(cleared.layer_states, 1)
+    jax.tree_util.tree_map(lambda a: np.testing.assert_array_equal(
+        a, np.zeros_like(a)), z)
+    assert int(cleared.step[1]) == 0
+    a, b = rows(cleared.layer_states, 0), rows(after.layer_states, 0)
+    jax.tree_util.tree_map(np.testing.assert_array_equal, a, b)
+
+
+def test_pool_acquire_release(whisper_setup):
+    cfg, params = whisper_setup
+    pool = SlotKVPool(cfg, params, n_slots=2, max_len=16, n_frames=N_FRAMES)
+    assert pool.n_free == 2
+    a = pool.acquire()
+    b = pool.acquire()
+    assert {a, b} == {0, 1} and pool.n_free == 0
+    with pytest.raises(IndexError):
+        pool.acquire()
+    pool.release(a)
+    assert pool.n_free == 1 and pool.acquire() == a
+
+
+def test_pool_requires_frames_for_audio(whisper_setup):
+    cfg, params = whisper_setup
+    with pytest.raises(ValueError):
+        SlotKVPool(cfg, params, n_slots=2, max_len=16)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler vs one-at-a-time equivalence
+# ---------------------------------------------------------------------------
+def test_scheduler_matches_one_at_a_time(whisper_engine):
+    """The §11 contract: slot-batched continuous decode emits, per
+    request, exactly the token stream a batch-1 ServeEngine.transcribe of
+    the same (padded) utterance produces."""
+    eng = whisper_engine
+    mels = _mels(eng.cfg, 5)
+    refs = [eng.transcribe(m, max_new=4)[0].tokens for m in mels]
+    sched = ContinuousBatchingScheduler(eng, n_slots=2, n_frames=N_FRAMES)
+    rids = [sched.submit(m, max_new=4) for m in mels[:3]]
+    res = sched.run()
+    rids += [sched.submit(m, max_new=4) for m in mels[3:]]  # staggered
+    res.update(sched.run())
+    for i, rid in enumerate(rids):
+        assert res[rid].tokens == refs[i]
+        assert res[rid].steps == 4
+
+
+def test_scheduler_matches_one_at_a_time_lm(lm_engine):
+    eng = lm_engine
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, eng.cfg.vocab_size, (1, 4)).astype(np.int32)
+               for _ in range(4)]
+    refs = [eng.generate(p, max_new=3)[0].tokens for p in prompts]
+    sched = ContinuousBatchingScheduler(eng, n_slots=2)
+    rids = [sched.submit(p, max_new=3) for p in prompts]
+    res = sched.run()
+    for i, rid in enumerate(rids):
+        assert res[rid].tokens == refs[i]
+
+
+def test_scheduler_pads_short_utterances(whisper_engine):
+    """Submitting an unpadded short utterance equals submitting it
+    pre-padded to the pool's frame capacity (the fixed-shape contract)."""
+    eng = whisper_engine
+    short = np.random.default_rng(3).standard_normal(
+        (1, 5, eng.cfg.n_mels)).astype(np.float32)
+    padded = np.pad(short, ((0, 0), (0, N_FRAMES - 5), (0, 0)))
+    sched = ContinuousBatchingScheduler(eng, n_slots=2, n_frames=N_FRAMES)
+    r1 = sched.submit(short, max_new=3)
+    r2 = sched.submit(padded, max_new=3)
+    res = sched.run()
+    assert res[r1].tokens == res[r2].tokens
+    too_long = np.zeros((1, N_FRAMES + 1, eng.cfg.n_mels), np.float32)
+    with pytest.raises(ValueError):
+        sched.submit(too_long)
+
+
+def test_scheduler_streams_tokens_in_order(whisper_engine):
+    eng = whisper_engine
+    mels = _mels(eng.cfg, 3)
+    sched = ContinuousBatchingScheduler(eng, n_slots=2, n_frames=N_FRAMES)
+    rids = [sched.submit(m, max_new=3) for m in mels]
+    events = []
+    res = sched.run(on_token=lambda ev: events.append(ev))
+    for rid in rids:
+        stream = [ev.token for ev in events if ev.rid == rid]
+        assert stream == res[rid].tokens          # streamed == final
+        dones = [ev.done for ev in events if ev.rid == rid]
+        assert dones[-1] and not any(dones[:-1])  # done marks the last
+
+
+_RAND_ENGINE = None
+
+
+def _rand_engine():
+    """One engine shared across hypothesis examples — its jit wrappers
+    (and their compiles) are per-instance, so rebuilding per example
+    would recompile the decode step every time."""
+    global _RAND_ENGINE
+    if _RAND_ENGINE is None:
+        cfg = get_smoke_config("whisper-tiny")
+        params = M.init_params(jax.random.PRNGKey(0), cfg, 64)
+        _RAND_ENGINE = ServeEngine(cfg, params, max_len=32, quant="none",
+                                   eos_id=-1)
+    return _RAND_ENGINE
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=4), min_size=1,
+                max_size=5),
+       st.lists(st.integers(min_value=0, max_value=3), min_size=5,
+                max_size=5),
+       st.integers(min_value=1, max_value=3))
+def test_randomized_arrival_eviction_schedules(max_news, gaps, n_slots):
+    """Property: for ANY arrival pattern (requests trickling in between
+    decode steps), ANY per-request budget mix, and ANY pool width, every
+    request's stream equals its one-at-a-time decode."""
+    eng = _rand_engine()
+    cfg = eng.cfg
+    mels = _mels(cfg, len(max_news), np.random.default_rng(7))
+    refs = [eng.transcribe(m, max_new=mn)[0].tokens
+            for m, mn in zip(mels, max_news)]
+    sched = ContinuousBatchingScheduler(eng, n_slots=n_slots,
+                                        n_frames=N_FRAMES)
+    rid2i, queued = {}, list(range(len(mels)))
+    gi = 0
+    while queued or sched.n_queued or sched.n_active:
+        if queued:
+            n = gaps[gi % len(gaps)] if gi else 1
+            if not (sched.n_queued or sched.n_active):
+                n = max(n, 1)        # idle scheduler must receive work
+            for _ in range(n):
+                if queued:
+                    i = queued.pop(0)
+                    rid2i[sched.submit(mels[i], max_new=max_news[i])] = i
+            gi += 1
+        sched.admit()
+        sched.decode_step()
+    for rid, i in rid2i.items():
+        assert sched.finished[rid].tokens == refs[i]
+        assert sched.finished[rid].steps == max_news[i]
+
+
+def test_zero_budget_request_matches_one_shot(whisper_engine):
+    """max_new=0 finishes immediately with the empty result the one-shot
+    path returns — it never occupies a slot."""
+    eng = whisper_engine
+    mel = _mels(eng.cfg, 1)[0]
+    sched = ContinuousBatchingScheduler(eng, n_slots=2, n_frames=N_FRAMES)
+    rid = sched.submit(mel, max_new=0)
+    assert sched.n_queued == 0
+    res = sched.run()
+    ref = eng.transcribe(mel, max_new=0)[0]
+    assert res[rid].tokens == ref.tokens == []
+    assert res[rid].steps == ref.steps == 0
+
+
+def test_run_claims_results_exactly_once(whisper_engine):
+    """run() hands each result out once and clears it — a long-running
+    submit()/run() loop holds no unbounded history."""
+    eng = whisper_engine
+    mels = _mels(eng.cfg, 2)
+    sched = ContinuousBatchingScheduler(eng, n_slots=2, n_frames=N_FRAMES)
+    r0 = sched.submit(mels[0], max_new=2)
+    first = sched.run()
+    assert set(first) == {r0} and not sched.finished
+    r1 = sched.submit(mels[1], max_new=2)
+    second = sched.run()
+    assert set(second) == {r1}                  # r0 not re-delivered
+    att = sched.attribution()
+    assert att["per_request_pdp_j"] == {}       # all claimed
+    assert att["busy_s"] == pytest.approx(0.0, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# EOS eviction
+# ---------------------------------------------------------------------------
+def test_scheduler_evicts_on_eos(whisper_setup):
+    cfg, params = whisper_setup
+    probe = ServeEngine(cfg, params, max_len=32, quant="none", eos_id=-1)
+    mel = _mels(cfg, 1)[0]
+    first = probe.transcribe(mel, max_new=3)[0].tokens[0]
+    eng = ServeEngine(cfg, params, max_len=32, quant="none",
+                      eos_id=int(first))
+    sched = ContinuousBatchingScheduler(eng, n_slots=2, n_frames=N_FRAMES)
+    rid = sched.submit(mel, max_new=8)
+    res = sched.run()
+    assert res[rid].steps == 1                     # evicted on first EOS
+    assert res[rid].tokens == [int(first)]
+    assert sched.pool.n_free == 2                  # slot returned
+
+
+# ---------------------------------------------------------------------------
+# Jit purity / zero retraces (style of tests/test_plan.py)
+# ---------------------------------------------------------------------------
+def test_zero_retraces_across_schedules(whisper_setup):
+    """The tentpole regression: the engine's decode step_fn is traced
+    exactly once per pool geometry, no matter the admission/eviction
+    schedule — insert/reset only splice values into fixed shapes."""
+    cfg, params = whisper_setup
+    eng = ServeEngine(cfg, params, max_len=32, quant="none", eos_id=-1)
+    mels = _mels(cfg, 6)
+    sched = ContinuousBatchingScheduler(eng, n_slots=2, n_frames=N_FRAMES)
+    sched.submit(mels[0], max_new=2)
+    sched.run()                                     # warmup: one trace
+    traces0 = eng._step_traces
+    assert traces0 >= 1
+    for m in mels[1:4]:
+        sched.submit(m, max_new=3)
+    sched.run()
+    for m in mels[4:]:                              # staggered second wave
+        sched.submit(m, max_new=2)
+    sched.run()
+    assert eng._step_traces == traces0              # ZERO retraces
+
+
+def test_slot_ops_are_trace_pure(whisper_setup):
+    """slot_insert/slot_reset jit and abstractly trace without touching
+    any engine accounting (they are pure pytree splices)."""
+    cfg, params = whisper_setup
+    off = OffloadEngine(prefer_pallas=False)
+    eng = ServeEngine(cfg, params, max_len=16, quant="q8_0", offload=off,
+                      eos_id=-1)
+    pool = SlotKVPool(cfg, eng._serve_params, n_slots=2, max_len=16,
+                      n_frames=N_FRAMES)
+    mel = jnp.asarray(_mels(cfg, 1)[0])
+    _, req = eng._prefill_jit(eng._serve_params, mel)
+    calls0 = off.stats.offloaded_calls + off.stats.fallback_calls
+    jax.eval_shape(slot_insert, pool.state, jnp.int32(0), req)
+    jax.eval_shape(slot_reset, pool.state, jnp.int32(0))
+    out = jax.jit(slot_insert)(pool.state, 1, req)
+    assert out.step.shape == (2,)
+    assert off.stats.offloaded_calls + off.stats.fallback_calls == calls0
+
+
+def test_scheduler_shares_plans_with_one_shot_path(whisper_setup):
+    """Plan keys are canonical across serving modes (DESIGN.md §11.3): a
+    transcribe at the pool's (batch, frames) point and the scheduler's
+    slot step resolve to the SAME PlanCache entry — no re-recording."""
+    cfg, params = whisper_setup
+    off = OffloadEngine(prefer_pallas=False)
+    eng = ServeEngine(cfg, params, max_len=16, quant="q8_0", offload=off,
+                      eos_id=-1)
+    mel = np.concatenate(_mels(cfg, 2), axis=0)
+    eng.transcribe(mel, max_new=2)                  # records ("step",q,2,F)
+    n_plans = len(eng._plans)
+    sched = ContinuousBatchingScheduler(eng, n_slots=2, n_frames=N_FRAMES)
+    sched.submit(mel[:1], max_new=2)
+    sched.run()
+    # scheduler added at most the batch-1 prefill plan; its slot step hit
+    # the existing ("step", q, 2, F) entry
+    assert len(eng._plans) == n_plans + 1
+    assert eng._plans.hits >= 1
+
+
+def test_ledger_commits_match_executed_steps(whisper_setup):
+    """Per-request attribution stays exact (§11.3): committed step
+    executions equal the batch steps the scheduler actually ran, and
+    per-request PDP sums to the batch total."""
+    cfg, params = whisper_setup
+    off = OffloadEngine(prefer_pallas=False)
+    eng = ServeEngine(cfg, params, max_len=16, quant="q8_0", offload=off,
+                      eos_id=-1)
+    sched = ContinuousBatchingScheduler(eng, n_slots=2, n_frames=N_FRAMES)
+    for m in _mels(cfg, 3):
+        sched.submit(m, max_new=3)
+    n_steps = 0
+    while sched.n_queued or sched.n_active:
+        sched.admit()
+        if sched.decode_step():
+            n_steps += 1
+    # 3 prefill commits + one commit per executed batch step
+    assert off.ledger.commits == 3 + n_steps
+    att = sched.attribution()
+    assert sum(att["per_request_pdp_j"].values()) == \
+        pytest.approx(att["batch_pdp_j"], rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Engine wrappers
+# ---------------------------------------------------------------------------
+def test_engine_submit_run_wrappers(whisper_engine):
+    eng = whisper_engine
+    mels = _mels(eng.cfg, 2)
+    # n_frames omitted: inferred from the first utterance's frame count
+    r0 = eng.submit_audio(mels[0], max_new=3, n_slots=2)
+    assert eng._scheduler.n_frames == N_FRAMES
+    r1 = eng.submit_audio(mels[1], max_new=3)   # defaults reuse the pool
+    got = eng.run()
+    refs = [eng.transcribe(m, max_new=3)[0].tokens for m in mels]
+    assert got[r0].tokens == refs[0] and got[r1].tokens == refs[1]

@@ -89,6 +89,45 @@ def test_transcribe_with_offload_engine(whisper_setup):
     assert rep["offload_rate"] > 0
 
 
+def test_per_request_eos_truncation(lm_setup):
+    """Early-finished rows no longer echo post-EOS argmax tokens or the
+    batch-global step count: each row truncates at ITS first EOS
+    (inclusive, matching a batch-1 run) and reports its own steps."""
+    cfg, params = lm_setup
+    probe = ServeEngine(cfg, params, max_len=64, quant="none", eos_id=None)
+    p_a = np.ones((1, 4), np.int32)
+    p_b = (np.arange(4, dtype=np.int32)[None] + 2) % cfg.vocab_size
+    t_a = probe.generate(p_a, max_new=6)[0].tokens
+    t_b = probe.generate(p_b, max_new=6)[0].tokens
+    eos = next((t for t in t_a if t not in t_b), None)
+    if eos is None:
+        pytest.skip("streams share every token on this seed")
+    eng = ServeEngine(cfg, params, max_len=64, quant="none",
+                      eos_id=int(eos))
+    res = eng.generate(np.concatenate([p_a, p_b]), max_new=6)
+    i = t_a.index(eos)
+    assert res[0].steps == i + 1                 # own steps, not batch's
+    assert res[0].tokens == t_a[:i + 1]          # EOS included, no echo
+    assert res[1].tokens == t_b                  # other row unaffected
+    assert all(len(r.tokens) == r.steps for r in res)
+
+
+def test_transcribe_rows_truncate_at_first_eos(whisper_setup):
+    """Same contract on the whisper path: if a row's stream contains the
+    EOS it is that row's last token."""
+    cfg, params = whisper_setup
+    probe = ServeEngine(cfg, params, max_len=64, quant="none", eos_id=None)
+    rng = np.random.default_rng(0)
+    mel = rng.standard_normal((2, 8, cfg.n_mels)).astype(np.float32)
+    first = probe.transcribe(mel[:1], max_new=4)[0].tokens[0]
+    eng = ServeEngine(cfg, params, max_len=64, quant="none",
+                      eos_id=int(first))
+    for r in eng.transcribe(mel, max_new=6):
+        assert len(r.tokens) == r.steps
+        if int(first) in r.tokens:
+            assert r.tokens.index(int(first)) == len(r.tokens) - 1
+
+
 def test_eos_stops_early(lm_setup):
     cfg, params = lm_setup
     eng = ServeEngine(cfg, params, max_len=64, quant="none", eos_id=None)
