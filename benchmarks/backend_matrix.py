@@ -1,0 +1,129 @@
+"""Per-backend execution matrix (DESIGN.md §12): the tiny-shape suite once
+per registered backend — tok/s + PDP per backend, the cross-backend
+restatement of the paper's Fig 9 cross-platform PDP table.
+
+One "token" is one pass of a decode-batch activation through the
+whisper-tiny Q8_0 projection set (attn/ffn.up/ffn.down — the dot-product
+hot spots the paper offloads). Each registered backend is forced via
+``REGISTRY.force`` and runs the identical jitted program, and the burst
+divides every suite K (zero residual), so each row measures exactly the
+backend it is labeled with: pallas_tpu (native on TPU, interpret-mode —
+deliberately slow — on this CPU container), xla_ref (the always-available
+reference), and host_residual pinned whole-problem (the paper's CPU-only
+comparison row). PDP uses the TDP-normalized methodology of §4.1
+(time x platform W), so off-TPU the numbers are proxies that rank, not
+absolute joules.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.backend_matrix [--smoke]
+
+``--smoke`` shrinks shapes/iters for the CI gate; the gate itself is
+numerical: every backend's output must stay allclose to the ref.py oracle.
+Writes experiments/bench/backend_matrix.json.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_table, save, timeit_median
+from repro.backends import (
+    MAIN, REGISTRY, KernelRequest, backend_platform, executor)
+from repro.core import energy
+from repro.core.qformats import quantize_q8_0
+from repro.kernels import ref
+from repro.tuning import kernel_for
+
+# whisper-tiny decode projections: (name, N, K) per token row
+SHAPES = [("attn.qkv", 384, 384), ("ffn.up", 1536, 384),
+          ("ffn.down", 384, 1536)]
+# divides every suite K, so k_res == 0 for all rows: no host_residual
+# share contaminates the per-backend comparison (the paper's zero-residual
+# claim for whisper's principal kernels, DESIGN.md §5)
+BURST = 128
+BATCH = 8                       # decode-batch rows = tokens per step
+
+
+def _suite(smoke: bool):
+    shapes = SHAPES[:1] if smoke else SHAPES
+    key = jax.random.PRNGKey(0)
+    xs, wqs = [], []
+    for i, (_, n, k) in enumerate(shapes):
+        kx, kw = jax.random.split(jax.random.fold_in(key, i))
+        xs.append(jax.random.normal(kx, (BATCH, k), jnp.float32))
+        wqs.append(quantize_q8_0(jax.random.normal(kw, (n, k)) * 0.1))
+    return shapes, xs, wqs
+
+
+def run(smoke: bool = False) -> dict:
+    shapes, xs, wqs = _suite(smoke)
+    iters = 2 if smoke else 3
+    rows, results = [], {}
+    ok = True
+    for name in REGISTRY.names():
+        backend = REGISTRY.get(name)
+        req = KernelRequest(kernel=kernel_for(BATCH, True), m=BATCH,
+                            n=shapes[0][1], k=shapes[0][2], dtype="q8_0",
+                            segment=MAIN)
+        if not backend.supports(req):
+            rows.append([name, "-", "-", "unsupported"])
+            continue
+        hints = backend.cost_hints(req)
+
+        def step_fn(xs, wqs=tuple(wqs), name=name):
+            # dispatch resolves at trace time; the compiled step is pure
+            return [executor.matmul(x, wq, burst=BURST, backend=name)
+                    for x, wq in zip(xs, wqs)]
+
+        jstep = jax.jit(step_fn)
+
+        def step(xs=tuple(xs), jstep=jstep):
+            return jstep(xs)
+
+        # force (not just pin) this row's backend: a force() context
+        # outranks an ambient REPRO_BACKEND, so rows stay correctly
+        # labeled even when the env var is set (DESIGN.md §12.2). Tracing
+        # happens inside the context; the timed replays are compiled.
+        with REGISTRY.force(name):
+            outs = step()
+            close = all(
+                np.allclose(np.asarray(o),
+                            np.asarray(ref.q8_matmul_ref(x, wq)),
+                            rtol=2e-4, atol=2e-4)
+                for o, x, wq in zip(outs, xs, wqs))
+            ok = ok and close
+            t_step = timeit_median(step, iters=iters, warmup=1)
+        tok_s = BATCH / max(t_step, 1e-12)
+        pdp_mj_tok = energy.pdp(t_step, energy.TPU_V5E_W) / BATCH * 1e3
+        results[name] = {"t_step_s": t_step, "tok_s": tok_s,
+                         "pdp_mj_per_tok": pdp_mj_tok,
+                         "allclose_ref": bool(close), "hints": hints}
+        rows.append([name, f"{tok_s:.1f}", f"{pdp_mj_tok:.3f}",
+                     "ok" if close else "MISMATCH"])
+
+    print(f"backend matrix — {len(shapes)} shape(s) x B={BATCH}, "
+          f"burst {BURST}, Q8_0 (pallas_tpu interprets off-TPU)")
+    print(fmt_table(rows, ["backend", "tok/s", "PDP mJ/tok", "vs ref"]))
+    out = {"smoke": smoke, "batch": BATCH, "burst": BURST,
+           "shapes": [{"name": s[0], "n": s[1], "k": s[2]} for s in shapes],
+           "platform": backend_platform(), "backends": results,
+           "all_match_ref": ok}
+    save("backend_matrix", out)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one shape, fewer iters — the CI parity gate")
+    args = ap.parse_args(argv)
+    out = run(smoke=args.smoke)
+    # CI gate: every backend must agree with the ref.py oracle
+    return 0 if out["all_match_ref"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -40,6 +40,8 @@ BENCHMARK_INDEX = [
     ("pdp_cross_platform", "Fig 9", "TDP-normalized cross-platform PDP"),
     ("decode_throughput", "§5.1 E2E / DESIGN.md §10",
      "engine-on vs engine-off decode tokens/s (jit-purity gate)"),
+    ("backend_matrix", "Fig 9 / DESIGN.md §12",
+     "tiny-shape tok/s + PDP per execution backend"),
     ("multi_utterance", "Table 4/5",
      "multi-utterance latency + transcript agreement"),
     ("continuous_batching", "§5.1 E2E / DESIGN.md §11",

@@ -11,9 +11,10 @@ import time
 import traceback
 
 from benchmarks import (
-    burst_sweep, continuous_batching, coverage_cdf, decode_throughput,
-    exec_breakdown, lmm_latency, lmm_power, multi_utterance,
-    pdp_cross_platform, profile_shares, q8_reconstruction, tune_sweep)
+    backend_matrix, burst_sweep, continuous_batching, coverage_cdf,
+    decode_throughput, exec_breakdown, lmm_latency, lmm_power,
+    multi_utterance, pdp_cross_platform, profile_shares, q8_reconstruction,
+    tune_sweep)
 
 SUITES = [
     ("q8_reconstruction (§4.2)", q8_reconstruction.run, False),
@@ -26,6 +27,7 @@ SUITES = [
     ("exec_breakdown (Fig 12)", exec_breakdown.run, False),
     ("decode_throughput (§5.1 E2E / DESIGN.md §10)", decode_throughput.run,
      False),
+    ("backend_matrix (Fig 9 / DESIGN.md §12)", backend_matrix.run, False),
     ("profile_shares (Fig 4)", profile_shares.run, True),
     ("multi_utterance (Table 4/5)", multi_utterance.run, True),
     ("continuous_batching (§5.1 / DESIGN.md §11)", continuous_batching.run,

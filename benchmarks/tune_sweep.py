@@ -27,7 +27,7 @@ import argparse
 
 from benchmarks.common import fmt_table, save
 from repro.core import energy
-from repro.kernels.ops import _largest_tile
+from repro.backends.pallas_tpu import _largest_tile
 from repro.tuning import (
     VMEM_FULL_BYTES, Autotuner, analytic_cost, budget_grid, measured_cost,
     padded_m, sweep_grid)

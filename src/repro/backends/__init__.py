@@ -1,0 +1,36 @@
+"""Pluggable execution backends (DESIGN.md §12).
+
+One dispatch API for the paper's mixed execution: a ``KernelRequest``
+describes one segment of one linear statically, a ``Backend`` answers it,
+and ``REGISTRY.dispatch(request)`` is the single call site that selects a
+kernel implementation. Built-ins, in capability-resolution order:
+
+  pallas_tpu     the Pallas accelerator kernels (native on TPU,
+                 interpret-mode elsewhere) — the IMAX analog
+  host_residual  the f32 host/VPU einsum arm for unaligned tails —
+                 the concurrent-ARM-host analog
+  xla_ref        ``lax.dot_general`` reference semantics, always
+                 available — the terminal default and the
+                 ``REPRO_BACKEND=xla_ref`` no-Pallas CI path
+
+``kernels.ops.matmul``, ``core.mixed_exec.mixed_matmul{,_q8}`` and
+``core.offload.OffloadEngine.execute`` are thin shims over
+``backends.executor``; new targets (GPU Pallas, a real CGLA simulator)
+plug in via ``REGISTRY.register``.
+"""
+from repro.backends.base import (  # noqa: F401
+    KERNELS, MAIN, RESIDUAL, Backend, KernelRequest)
+from repro.backends.host_residual import HostResidualBackend  # noqa: F401
+from repro.backends.pallas_tpu import PallasTPUBackend  # noqa: F401
+from repro.backends.platform import (  # noqa: F401
+    backend_platform, default_interpret, on_tpu, reset_probe_cache)
+from repro.backends.registry import (  # noqa: F401
+    FORCE_ENV, REGISTRY, BackendRegistry, pin_for_prefer)
+from repro.backends.xla_ref import XLARefBackend  # noqa: F401
+
+# registration order IS capability-resolution priority (DESIGN.md §12.2)
+REGISTRY.register(PallasTPUBackend())
+REGISTRY.register(HostResidualBackend())
+REGISTRY.register(XLARefBackend())
+
+from repro.backends import executor  # noqa: E402,F401  (needs REGISTRY)

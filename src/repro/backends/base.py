@@ -1,0 +1,83 @@
+"""The backend protocol and the request object it answers (DESIGN.md §12.1).
+
+A ``KernelRequest`` describes one *segment* of one linear invocation — the
+burst-aligned main segment or the ragged residual tail of the paper's mixed
+execution — in purely static terms (shapes, dtype, tile hints). A
+``Backend`` looks at a request and either declines it (``supports``) or
+returns a callable that runs it (``build``). Nothing else in the codebase
+selects a kernel implementation; ``registry.dispatch`` is the single seam
+every future target (GPU Pallas, pure-CPU CI, a real CGLA simulator) plugs
+into.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
+
+#: kernels the execution layer knows how to name (tuning keys use the same
+#: identifiers — ``tuning.kernel_for`` is the canonical mapper).
+KERNELS = ("q8_matmul", "q8_matvec", "bf16_matmul")
+
+MAIN = "main"
+RESIDUAL = "residual"
+
+
+@dataclass(frozen=True)
+class KernelRequest:
+    """One segment of one linear call, described statically.
+
+    ``m`` is the logical row count of the flattened activation (pre
+    sublane padding); ``k`` is the contraction length *this segment* sees
+    (k_main for the aligned segment, k_res for the tail) — backends never
+    learn about the split, they just run their slice.
+    """
+    kernel: str                               # one of KERNELS
+    m: int
+    n: int
+    k: int
+    dtype: str                                # "q8_0" | "bf16"
+    segment: str = MAIN                       # MAIN | RESIDUAL
+    tiling: Optional[Tuple[int, int, int]] = None   # pinned (bm, bn, bk)
+    block_k: int = 256                        # untuned fallback K tile
+    interpret: Optional[bool] = None          # None -> platform default
+    # False marks a *structural* routing decision (a capacity-based
+    # offload=False fallback, like the residual arm) that REPRO_BACKEND
+    # forcing must not override (DESIGN.md §12.2)
+    forceable: bool = True
+    # dispatch-time collaborators; excluded from equality so requests stay
+    # comparable/hashable on their static identity
+    tuner: Any = field(default=None, compare=False, repr=False)
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.m * self.n * self.k
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """What the registry requires of an execution backend."""
+
+    name: str
+
+    def supports(self, req: KernelRequest) -> bool:
+        """Capability: can this backend run ``req`` correctly at all?
+        (Used when a plan or ``REPRO_BACKEND`` pins this backend.)"""
+        ...
+
+    def auto(self, req: KernelRequest) -> bool:
+        """Would this backend volunteer for ``req`` under automatic
+        capability resolution? Stricter than ``supports`` — e.g. the
+        Pallas backend supports interpret-mode execution anywhere but only
+        volunteers on a real TPU (DESIGN.md §6.3)."""
+        ...
+
+    def build(self, req: KernelRequest) -> Callable:
+        """A callable ``(x_segment, w_segment) -> f32 output`` for this
+        request. ``w_segment`` is a ``jax.Array`` or a ``QTensor`` already
+        sliced to the segment's K range."""
+        ...
+
+    def cost_hints(self, req: KernelRequest) -> Dict[str, Any]:
+        """Rough dispatch-relevant facts (flops, native-vs-emulated, unit)
+        for benchmarks and resolution diagnostics."""
+        ...

@@ -1,0 +1,114 @@
+"""Mixed-execution executor: one entry point for every linear
+(DESIGN.md §12.3).
+
+``matmul`` is what the legacy surfaces (``kernels.ops.matmul``,
+``core.mixed_exec.mixed_matmul{,_q8}``, ``OffloadEngine.execute``) are now
+thin shims over: flatten leading batch dims, split the K contraction at
+the burst boundary (paper §3.2 — the accelerator never sees a partial
+burst), dispatch *each segment* through the backend registry, and add the
+partial sums — bit-compatible with the monolithic oracle in f32.
+
+The split mechanics live here, the kernel choice does not: every segment
+becomes a ``KernelRequest`` and ``registry.dispatch`` picks who runs it.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.backends.base import MAIN, RESIDUAL, KernelRequest
+from repro.backends.registry import REGISTRY
+from repro.core.mixed_exec import split_aligned
+from repro.core.qformats import QBLOCK, QTensor
+from repro.tuning import kernel_for
+
+
+def _flatten_leading(x: jax.Array):
+    lead = x.shape[:-1]
+    m = int(np.prod(lead)) if lead else 1
+    return x.reshape(m, x.shape[-1]), lead
+
+
+def _slice_k(w, start: int, stop: int):
+    """Slice a weight to a K range. QTensor slicing moves whole Q8_0
+    blocks — callers guarantee block-aligned boundaries (the burst is a
+    QBLOCK multiple)."""
+    if isinstance(w, QTensor):
+        b0, b1 = start // QBLOCK, stop // QBLOCK
+        return QTensor(qs=w.qs[..., b0:b1, :], scales=w.scales[..., b0:b1])
+    return w[:, start:stop]
+
+
+def split_matmul(x: jax.Array, w, burst: int, *,
+                 main_fn: Optional[Callable] = None,
+                 backend: Optional[str] = None,
+                 tiling: Optional[Tuple[int, int, int]] = None,
+                 tuner=None,
+                 interpret: Optional[bool] = None,
+                 block_k: int = 256,
+                 forceable: bool = True) -> jax.Array:
+    """y = x @ W^T with the K-contraction split at the burst boundary.
+
+    x: (..., K); w: (N, K) array or QTensor over W[N, K]. The aligned main
+    segment dispatches through the registry (optionally pinned to
+    ``backend``) unless ``main_fn`` overrides it (the legacy
+    ``mixed_matmul`` contract); the residual always resolves by capability
+    — the host path, keeping the paper's concurrent-ARM-arm semantics.
+    Returns f32.
+    """
+    quant = isinstance(w, QTensor)
+    if quant and burst % QBLOCK != 0:
+        raise ValueError(f"burst {burst} must be a multiple of QBLOCK={QBLOCK}")
+    k = x.shape[-1]
+    n = w.shape[0]
+    m = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
+    dtype = "q8_0" if quant else "bf16"
+    kern = kernel_for(m, quant)
+    k_main, k_res = split_aligned(k, burst)
+    parts = []
+    if k_main:
+        fn = main_fn
+        if fn is None:
+            req = KernelRequest(kernel=kern, m=m, n=n, k=k_main, dtype=dtype,
+                                segment=MAIN, tiling=tiling, block_k=block_k,
+                                interpret=interpret, forceable=forceable,
+                                tuner=tuner)
+            fn = REGISTRY.dispatch(req, pin=backend)
+        parts.append(fn(x[..., :k_main], _slice_k(w, 0, k_main)))
+    if k_res:
+        req = KernelRequest(kernel=kern, m=m, n=n, k=k_res, dtype=dtype,
+                            segment=RESIDUAL, interpret=interpret)
+        fn = REGISTRY.dispatch(req)
+        parts.append(fn(x[..., k_main:], _slice_k(w, k_main, k)))
+    if not parts:
+        return jnp.zeros((*x.shape[:-1], n), jnp.float32)
+    out = parts[0]
+    for p in parts[1:]:
+        out = out + p
+    return out
+
+
+def matmul(x: jax.Array, w, *,
+           burst: int = 256,
+           backend: Optional[str] = None,
+           tiling: Optional[Tuple[int, int, int]] = None,
+           tuner=None,
+           interpret: Optional[bool] = None,
+           block_k: int = 256,
+           forceable: bool = True) -> jax.Array:
+    """The registry-era public matmul: handles leading batch dims, then
+    ``split_matmul``. x: (..., K); returns (..., N) f32. ``backend`` pins
+    the main segment (a recorded ``PlanEntry.backend``, DESIGN.md §12.3);
+    ``tiling`` pins the main-segment tiles to a plan entry's resolution —
+    with both set this is a pure function of its arguments, no cache
+    lookups at execution (DESIGN.md §10.1). ``forceable=False`` marks the
+    pin structural — exempt from ``REPRO_BACKEND`` (a capacity fallback
+    must keep its reference path, DESIGN.md §12.2)."""
+    x2d, lead = _flatten_leading(x)
+    out = split_matmul(x2d, w, burst, backend=backend, tiling=tiling,
+                       tuner=tuner, interpret=interpret, block_k=block_k,
+                       forceable=forceable)
+    return out.reshape(*lead, out.shape[-1])

@@ -1,0 +1,53 @@
+"""The host-residual backend: the paper's ARM-host path (DESIGN.md §12).
+
+In the paper each vector's unaligned tail (L mod b elements) runs
+concurrently on the ARM host while IMAX consumes the aligned bursts; here
+that tail is a skinny f32 ``jnp.einsum`` contraction on the VPU — exactly
+the residual arm that used to live inline in ``core/mixed_exec.py``.
+Residual weights are dequantized on this path (whole Q8_0 blocks: the
+burst is a QBLOCK multiple, so the tail starts block-aligned).
+
+Capability-wise it can run *any* segment — it is plain jnp — which is what
+lets ``benchmarks/backend_matrix.py`` pin it as a whole-problem host
+baseline (the paper's CPU-only comparison row). Under automatic resolution
+it only volunteers for residual segments.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.backends.base import RESIDUAL, KernelRequest
+from repro.core.qformats import QBLOCK, QTensor
+
+
+def _dense_host(x, w):
+    return jnp.einsum("...k,nk->...n", x.astype(jnp.float32),
+                      w.astype(jnp.float32))
+
+
+def _q8_host(x, wq: QTensor):
+    # residual weights dequantized on the host path
+    w = wq.qs.astype(jnp.float32) * wq.scales[..., None]
+    w = w.reshape(*w.shape[:-2], -1)
+    return jnp.einsum("...k,nk->...n", x.astype(jnp.float32), w)
+
+
+class HostResidualBackend:
+    """f32 einsum on the host/VPU — the mixed-execution residual arm."""
+
+    name = "host_residual"
+
+    def supports(self, req: KernelRequest) -> bool:
+        return req.dtype != "q8_0" or req.k % QBLOCK == 0
+
+    def auto(self, req: KernelRequest) -> bool:
+        return req.segment == RESIDUAL and self.supports(req)
+
+    def build(self, req: KernelRequest):
+        if req.dtype == "q8_0":
+            return _q8_host
+        return _dense_host
+
+    def cost_hints(self, req: KernelRequest):
+        return {"flops": req.flops, "unit": "VPU/host", "native": True,
+                "interpret": False}

@@ -1,0 +1,137 @@
+"""The Pallas TPU backend: the paper's accelerator path (DESIGN.md §12).
+
+Owns everything that used to live inline in ``kernels/ops.py``: sublane
+padding, matvec-vs-matmul selection for skinny decode batches, and tile
+resolution (explicit plan tiling > tuner cache > module defaults,
+DESIGN.md §10.1 / §9.4). Off-TPU the same kernels run ``interpret=True``
+for correctness tests; the backend only *volunteers* (``auto``) on a real
+TPU — elsewhere it must be pinned explicitly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.backends import platform
+from repro.backends.base import KERNELS, MAIN, KernelRequest
+from repro.core.qformats import QBLOCK, QTensor
+from repro.kernels.bf16_matmul import bf16_matmul
+from repro.kernels.q8_matmul import q8_matmul
+from repro.kernels.q8_matvec import q8_matvec
+
+_SUBLANE = 8  # f32 min sublane tile on TPU
+
+
+def _pad_m(x: jax.Array, mult: int = _SUBLANE):
+    m = x.shape[0]
+    pad = (-m) % mult
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, m
+
+
+def _tuned(tuner, kernel: str, m: int, n: int, k: int, dtype: str):
+    """Winning tiling for the *main-segment* shape, or None (tuner absent or
+    nothing admissible under its VMEM budget)."""
+    if tuner is None:
+        return None
+    return tuner.best_tiling(kernel, m, n, k, dtype)
+
+
+def _block_shape(rec) -> Tuple[int, int, int]:
+    """Normalize a tiling source — TuningRecord or plan-entry tuple."""
+    if isinstance(rec, tuple):
+        return rec
+    return rec.block_m, rec.block_n, rec.block_k
+
+
+def _largest_tile(dim: int, cap: int, mult: int = 1) -> int:
+    """Largest t <= cap with t % mult == 0 and dim % t == 0."""
+    t = min(cap, dim)
+    while t > 1 and (dim % t or (mult > 1 and t % mult)):
+        t -= mult if mult > 1 and t % mult == 0 else 1
+    return max(t, 1)
+
+
+def q8_main(x2d: jax.Array, wq: QTensor, *, interpret: bool,
+            block_k: int, tuner=None, tiling=None) -> jax.Array:
+    """Aligned-segment Q8_0 path: matvec variant for skinny M, tiled matmul
+    otherwise. Handles M/N padding so the kernel only sees full tiles.
+    Tile shapes come (in precedence order) from an explicit ``tiling`` — a
+    trace-time plan entry's resolved ``(block_m, block_n, block_k)``
+    (DESIGN.md §10.1) — else a tuner-cache lookup (DESIGN.md §9.4), else
+    the module-level defaults."""
+    qs2d = wq.flat_qs()
+    n, k = qs2d.shape
+    xp, m = _pad_m(x2d)
+    mp = xp.shape[0]
+    if mp <= 2 * _SUBLANE:
+        rec = tiling or _tuned(tuner, "q8_matvec", mp, n, k, "q8_0")
+        # decode: N tiled at 512 when divisible, else largest divisor tile
+        bn = _block_shape(rec)[1] if rec else _largest_tile(n, 512)
+        out = q8_matvec(xp, qs2d, wq.scales, block_n=bn, interpret=interpret)
+    else:
+        rec = tiling or _tuned(tuner, "q8_matmul", mp, n, k, "q8_0")
+        if rec:
+            bm, bn, bk = _block_shape(rec)
+        else:
+            bm = _largest_tile(mp, 128)
+            bn = _largest_tile(n, 256)
+            bk = _largest_tile(k, block_k, mult=QBLOCK)
+        out = q8_matmul(xp, qs2d, wq.scales, block_m=bm, block_n=bn,
+                        block_k=bk, interpret=interpret)
+    return out[:m]
+
+
+def bf16_main(x2d: jax.Array, w: jax.Array, *, interpret: bool,
+              block_k: int, tuner=None, tiling=None) -> jax.Array:
+    xp, m = _pad_m(x2d)
+    mp = xp.shape[0]
+    n, k = w.shape
+    rec = tiling or _tuned(tuner, "bf16_matmul", mp, n, k, "bf16")
+    if rec:
+        bm, bn, bk = _block_shape(rec)
+    else:
+        bm = _largest_tile(mp, 128)
+        bn = _largest_tile(n, 256)
+        bk = _largest_tile(k, block_k)
+    return bf16_matmul(xp, w, block_m=bm, block_n=bn, block_k=bk,
+                       interpret=interpret)[:m]
+
+
+class PallasTPUBackend:
+    """Accelerator kernels — native on TPU, ``interpret=True`` elsewhere."""
+
+    name = "pallas_tpu"
+
+    def supports(self, req: KernelRequest) -> bool:
+        # main segments only: the residual tail is by construction ragged
+        # (its whole reason to exist is that it doesn't tile) and belongs
+        # to the host path
+        if req.segment != MAIN or req.kernel not in KERNELS:
+            return False
+        if req.dtype == "q8_0" and req.k % QBLOCK != 0:
+            return False
+        return True
+
+    def auto(self, req: KernelRequest) -> bool:
+        return self.supports(req) and platform.on_tpu()
+
+    def _interpret(self, req: KernelRequest) -> bool:
+        return (req.interpret if req.interpret is not None
+                else platform.default_interpret())
+
+    def build(self, req: KernelRequest):
+        kw = dict(interpret=self._interpret(req), block_k=req.block_k,
+                  tuner=req.tuner, tiling=req.tiling)
+        if req.dtype == "q8_0":
+            return functools.partial(q8_main, **kw)
+        return functools.partial(bf16_main, **kw)
+
+    def cost_hints(self, req: KernelRequest):
+        return {"flops": req.flops, "unit": "MXU",
+                "native": platform.on_tpu(),
+                "interpret": self._interpret(req)}

@@ -1,0 +1,35 @@
+"""Single cached platform probe (DESIGN.md §12.2).
+
+Every "am I on a TPU?" question in the execution layer routes through this
+module — kernels/ops.py, tuning/tuner.py and tuning/cost.py previously each
+probed ``jax.default_backend()`` themselves. One probe means one consistent
+answer per process (JAX's backend choice is fixed once initialized anyway)
+and one place for tests to reset when they spoof a platform.
+"""
+from __future__ import annotations
+
+_PROBE: dict = {}
+
+
+def backend_platform() -> str:
+    """The JAX platform name ("tpu" | "cpu" | "gpu"), probed once per
+    process. jax is imported lazily so import-light callers (the analytic
+    tuning path) stay import-light."""
+    if "platform" not in _PROBE:
+        import jax
+        _PROBE["platform"] = jax.default_backend()
+    return _PROBE["platform"]
+
+
+def on_tpu() -> bool:
+    return backend_platform() == "tpu"
+
+
+def default_interpret() -> bool:
+    """Pallas kernels run ``interpret=True`` off-TPU (DESIGN.md §6.3)."""
+    return not on_tpu()
+
+
+def reset_probe_cache() -> None:
+    """Drop the cached probe (tests that monkeypatch the platform)."""
+    _PROBE.clear()

@@ -1,0 +1,126 @@
+"""The backend registry and its resolver (DESIGN.md §12.2).
+
+``dispatch(request)`` is the ONE call site in the codebase that selects a
+kernel implementation. Resolution precedence for a *main* segment:
+
+  1. a forced backend — ``force("name")`` context or the ``REPRO_BACKEND``
+     env var (how CI runs the whole tier-1 suite on the no-Pallas path);
+  2. a pinned backend — ``PlanEntry.backend`` or an explicit
+     ``prefer_pallas`` translation from the legacy shims;
+  3. capability order: the first registered backend whose ``auto(request)``
+     volunteers (pallas_tpu on TPU, then host_residual for residual
+     segments, with xla_ref the always-available terminal default).
+
+Residual segments skip 1–2: the host residual arm is *structural* — part
+of the paper's mixed-execution semantics (f32 on the host), not a choice a
+user should redirect — so forcing ``xla_ref`` never silently changes
+residual numerics. A forced or pinned backend that cannot support the
+request falls through to capability order rather than erroring, so e.g.
+``REPRO_BACKEND=pallas_tpu`` still routes ragged tails to the host path.
+
+Forcing beats a plan pin *by design* — it is how one env var retargets a
+whole suite whose plans pin pallas — which cuts both ways: set
+``REPRO_BACKEND`` for the whole process (before plans are recorded), not
+mid-flight, or ledger ``by_backend`` attribution for already-recorded
+plans will name the planned backend while the forced one actually runs.
+Scoped experiments should use the ``force()`` context around both
+planning and execution (``benchmarks/backend_matrix.py`` does this).
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.backends.base import MAIN, Backend, KernelRequest
+
+#: env var forcing a main-segment backend process-wide (read live, so test
+#: monkeypatching works without re-imports); empty value means unset.
+FORCE_ENV = "REPRO_BACKEND"
+
+
+class BackendRegistry:
+    """Ordered backend collection + the capability resolver."""
+
+    def __init__(self) -> None:
+        self._backends: Dict[str, Backend] = {}
+        self._order: List[str] = []
+        self._forced: Optional[str] = None
+
+    # -- membership ------------------------------------------------------
+    def register(self, backend: Backend) -> Backend:
+        """Add a backend; registration order IS capability-resolution
+        priority. Re-registering a name replaces it in place (keeps its
+        priority slot) so tests can swap doubles in."""
+        if backend.name not in self._backends:
+            self._order.append(backend.name)
+        self._backends[backend.name] = backend
+        return backend
+
+    def get(self, name: str) -> Backend:
+        try:
+            return self._backends[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown backend {name!r}; registered: {self.names()}"
+            ) from None
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._order)
+
+    # -- forcing ---------------------------------------------------------
+    def forced(self) -> Optional[str]:
+        """The forced backend name, if any: an active ``force()`` context
+        wins over the ``REPRO_BACKEND`` env var."""
+        return self._forced or os.environ.get(FORCE_ENV) or None
+
+    @contextmanager
+    def force(self, name: str):
+        """Force main-segment resolution to ``name`` while active."""
+        self.get(name)                       # fail fast on typos
+        prev, self._forced = self._forced, name
+        try:
+            yield self
+        finally:
+            self._forced = prev
+
+    # -- resolution ------------------------------------------------------
+    def resolve(self, req: KernelRequest,
+                pin: Optional[str] = None) -> Backend:
+        """The backend that will run ``req`` (see module docstring for the
+        precedence rules)."""
+        if req.segment == MAIN:
+            # forcing skips structural decisions (forceable=False: a
+            # capacity-based fallback must keep its reference path, the
+            # same exemption residual segments get); the pin still applies
+            names = (self.forced(), pin) if req.forceable else (pin,)
+            for name in names:
+                if name:
+                    b = self.get(name)
+                    if b.supports(req):
+                        return b
+        for name in self._order:
+            b = self._backends[name]
+            if b.auto(req):
+                return b
+        raise LookupError(f"no registered backend volunteers for {req}")
+
+    def dispatch(self, req: KernelRequest,
+                 pin: Optional[str] = None) -> Callable:
+        """Resolve and build: the callable that runs this segment."""
+        return self.resolve(req, pin).build(req)
+
+
+#: the process-wide registry every dispatch goes through; populated with
+#: the three built-in backends by ``repro.backends.__init__``.
+REGISTRY = BackendRegistry()
+
+
+def pin_for_prefer(prefer_pallas: Optional[bool]) -> Optional[str]:
+    """Translate the legacy ``prefer_pallas`` tri-state of
+    ``kernels.ops.matmul`` / ``OffloadEngine`` into a registry pin:
+    True -> pallas_tpu, False -> xla_ref, None -> capability resolution
+    (which reproduces the old pallas-on-TPU/XLA-elsewhere rule)."""
+    if prefer_pallas is None:
+        return None
+    return "pallas_tpu" if prefer_pallas else "xla_ref"

@@ -1,0 +1,37 @@
+"""The XLA reference backend: ``lax.dot_general`` via the ``ref.py``
+oracles — always available, semantics-defining (DESIGN.md §12).
+
+This is the path the model/dry-run flow always took off-TPU: the *same*
+dequant math as the Pallas kernels, lowered by XLA. It volunteers for any
+main segment (the terminal default of capability resolution) and is the
+backend ``REPRO_BACKEND=xla_ref`` forces for no-Pallas CI runs.
+"""
+from __future__ import annotations
+
+from repro.backends.base import MAIN, KernelRequest
+from repro.core.qformats import QBLOCK
+from repro.kernels import ref
+
+
+class XLARefBackend:
+    """Reference semantics on whatever XLA targets — the always-green path."""
+
+    name = "xla_ref"
+
+    def supports(self, req: KernelRequest) -> bool:
+        # the ref dequant reshapes whole Q8_0 blocks; dense runs anywhere
+        return req.dtype != "q8_0" or req.k % QBLOCK == 0
+
+    def auto(self, req: KernelRequest) -> bool:
+        # terminal default for main segments; residuals prefer the host
+        # path (registered ahead of this backend) to keep f32 semantics
+        return self.supports(req)
+
+    def build(self, req: KernelRequest):
+        if req.dtype == "q8_0":
+            return ref.q8_matmul_ref
+        return ref.matmul_bf16_ref
+
+    def cost_hints(self, req: KernelRequest):
+        return {"flops": req.flops, "unit": "XLA", "native": True,
+                "interpret": False}

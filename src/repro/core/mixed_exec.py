@@ -12,14 +12,18 @@ monolithic oracle in f32.
 For Whisper's static dims (384, 1536, 64 — all multiples of 16/128 after the
 lane re-scaling of DESIGN.md §2) the residual is empty, which is exactly the
 paper's zero-residual claim for the principal kernels.
+
+The split *arithmetic* (``split_point``/``split_aligned``/
+``residual_fraction``) is canonical here; the split *execution* moved to
+``repro.backends.executor`` (DESIGN.md §12), which dispatches each segment
+through the backend registry. ``mixed_matmul``/``mixed_matmul_q8`` remain
+as deprecation-documented shims so existing callers and tests stay green.
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Tuple
 
-import jax.numpy as jnp
-
-from repro.core.qformats import QBLOCK, QTensor
+from repro.core.qformats import QTensor
 
 
 def split_point(length: int, burst: int) -> int:
@@ -35,62 +39,32 @@ def split_aligned(length: int, burst: int) -> Tuple[int, int]:
     return m, length - m
 
 
-def mixed_matmul(x: jnp.ndarray,
-                 w: jnp.ndarray,
-                 burst: int,
-                 main_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]):
+def mixed_matmul(x, w, burst: int, main_fn):
     """y = x @ w.T with the K-contraction split at the burst boundary.
 
-    x: (..., K); w: (N, K).  ``main_fn`` runs the aligned segment (the
-    accelerator path); the residual always runs as a plain jnp contraction
-    (the host path). Returns f32.
+    .. deprecated:: shim over ``backends.executor.split_matmul``
+       (DESIGN.md §12.3). ``main_fn`` still runs the aligned segment (the
+       legacy accelerator-path override); the residual now dispatches
+       through the registry, resolving to the host_residual backend — the
+       same f32 jnp contraction that used to be inline here. Returns f32.
     """
-    k = x.shape[-1]
-    k_main, k_res = split_aligned(k, burst)
-    parts = []
-    if k_main:
-        parts.append(main_fn(x[..., :k_main], w[:, :k_main]))
-    if k_res:
-        parts.append(jnp.einsum("...k,nk->...n",
-                                x[..., k_main:].astype(jnp.float32),
-                                w[:, k_main:].astype(jnp.float32)))
-    if not parts:
-        return jnp.zeros((*x.shape[:-1], w.shape[0]), jnp.float32)
-    out = parts[0]
-    for p in parts[1:]:
-        out = out + p
-    return out
+    from repro.backends import executor
+    return executor.split_matmul(x, w, burst, main_fn=main_fn)
 
 
-def mixed_matmul_q8(x: jnp.ndarray,
-                    wq: QTensor,
-                    burst: int,
-                    main_fn) -> jnp.ndarray:
-    """Quantized variant. ``burst`` must be a multiple of the Q8_0 block (32)
-    so the main segment covers whole quantization blocks (the paper's bursts
-    of 16 elements hold whole 8-bit packed words for the same reason)."""
-    if burst % QBLOCK != 0:
-        raise ValueError(f"burst {burst} must be a multiple of QBLOCK={QBLOCK}")
-    k = x.shape[-1]
-    k_main, k_res = split_aligned(k, burst)
-    nb = k_main // QBLOCK
-    parts = []
-    if k_main:
-        main_q = QTensor(qs=wq.qs[..., :nb, :], scales=wq.scales[..., :nb])
-        parts.append(main_fn(x[..., :k_main], main_q))
-    if k_res:
-        # residual weights dequantized on the host path
-        tail_q = QTensor(qs=wq.qs[..., nb:, :], scales=wq.scales[..., nb:])
-        w_tail = tail_q.qs.astype(jnp.float32) * tail_q.scales[..., None]
-        w_tail = w_tail.reshape(*w_tail.shape[:-2], k_res)
-        parts.append(jnp.einsum("...k,nk->...n",
-                                x[..., k_main:].astype(jnp.float32), w_tail))
-    if not parts:
-        return jnp.zeros((*x.shape[:-1], wq.shape[0]), jnp.float32)
-    out = parts[0]
-    for p in parts[1:]:
-        out = out + p
-    return out
+def mixed_matmul_q8(x, wq: QTensor, burst: int, main_fn):
+    """Quantized variant of ``mixed_matmul``. ``burst`` must be a multiple
+    of the Q8_0 block (32) so the main segment covers whole quantization
+    blocks (the paper's bursts of 16 elements hold whole 8-bit packed words
+    for the same reason).
+
+    .. deprecated:: shim over ``backends.executor.split_matmul``
+       (DESIGN.md §12.3) — the executor slices the QTensor per segment and
+       the host_residual backend dequantizes the tail, exactly the code
+       that used to live inline here.
+    """
+    from repro.backends import executor
+    return executor.split_matmul(x, wq, burst, main_fn=main_fn)
 
 
 def select_burst(k: int, tuner=None, *, kernel: str = "q8_matmul",

@@ -7,8 +7,8 @@ and account the PDP consequences. This is the glue between:
 
   coverage.py  (does the working set fit the local-memory budget?)
   bursts.py    (which granularity minimizes the PDP proxy?)
-  mixed_exec   (aligned main + residual split)
-  kernels.ops  (the actual compute paths)
+  backends/    (the execution-backend registry + mixed-split executor —
+                the actual compute paths, DESIGN.md §12)
   energy.py    (PDP/EDP accounting per step)
   plan.py      (trace-time routing resolution — DESIGN.md §10)
 
@@ -30,10 +30,10 @@ from typing import Dict, Optional
 import jax
 import numpy as np
 
+from repro.backends import executor, pin_for_prefer
 from repro.core.coverage import MulMat, fits
 from repro.core.plan import DispatchPlan, PlanEntry, plan_linear
 from repro.core.qformats import QTensor
-from repro.kernels import ops
 from repro.tuning import Autotuner
 
 
@@ -49,6 +49,7 @@ class OffloadStats:
     residual_flops: int = 0
     tuned_calls: int = 0        # offloads that ran on a tuned burst
     by_kernel: Dict[str, int] = field(default_factory=dict)
+    by_backend: Dict[str, int] = field(default_factory=dict)  # DESIGN.md §12.3
 
     def offload_rate(self) -> float:
         t = self.offloaded_calls + self.fallback_calls
@@ -82,6 +83,8 @@ class OffloadLedger:
             s.fallback_calls += times
             s.fallback_flops += entry.fallback_flops * times
         s.by_kernel[entry.name] = s.by_kernel.get(entry.name, 0) + times
+        s.by_backend[entry.backend] = (s.by_backend.get(entry.backend, 0)
+                                       + times)
 
     def commit(self, plan: Optional[DispatchPlan], times: int = 1) -> None:
         """Account ``times`` executions of a traced program's plan."""
@@ -123,10 +126,13 @@ class OffloadEngine:
     # -- planning ---------------------------------------------------------
     def plan_entry(self, m: int, k: int, n: int, *, quantized: bool,
                    name: str = "linear") -> PlanEntry:
-        """Resolve routing for one static shape (pure; DESIGN.md §10.1)."""
+        """Resolve routing for one static shape (pure; DESIGN.md §10.1).
+        The entry pins the registry backend (DESIGN.md §12.3), translated
+        from this engine's legacy ``prefer_pallas`` tri-state."""
         return plan_linear(name, m, k, n, quantized=quantized,
                            vmem_budget_kb=self.vmem_budget_kb,
-                           default_burst=self.burst, tuner=self.tuner)
+                           default_burst=self.burst, tuner=self.tuner,
+                           backend=pin_for_prefer(self.prefer_pallas))
 
     @contextmanager
     def recording(self, plan: DispatchPlan):
@@ -160,10 +166,11 @@ class OffloadEngine:
 
     def execute(self, x: jax.Array, w, entry: PlanEntry) -> jax.Array:
         """Run one linear per a resolved ``PlanEntry`` — a pure function of
-        ``(x, w, entry)`` plus engine path config (DESIGN.md §10.1)."""
-        if entry.offload:
-            return ops.matmul(x, w, burst=entry.burst,
-                              prefer_pallas=self.prefer_pallas,
-                              interpret=self.interpret,
-                              tiling=entry.tiling)
-        return ops.matmul(x, w, burst=entry.burst, prefer_pallas=False)
+        ``(x, w, entry)`` plus engine path config (DESIGN.md §10.1). The
+        entry pins burst, tiling AND backend; ``registry.dispatch`` (via
+        the executor) is the only place a kernel implementation is
+        selected — no backend conditionals here (DESIGN.md §12.3)."""
+        return executor.matmul(x, w, burst=entry.burst,
+                               backend=entry.backend, tiling=entry.tiling,
+                               interpret=self.interpret,
+                               forceable=entry.offload)

@@ -29,6 +29,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
 
+from repro.backends import MAIN, KernelRequest, REGISTRY
 from repro.core.coverage import MulMat, fits
 from repro.core.mixed_exec import select_burst, split_aligned
 from repro.tuning import kernel_for, padded_m
@@ -40,9 +41,12 @@ class PlanEntry:
 
     Everything the execution path needs (and everything the ledger
     accounts) is here: the ``(name, m, k, n, dtype)`` identity, the
-    offload decision, the burst split, and the tuned tiling for the main
+    offload decision, the burst split, the tuned tiling for the main
     segment (``None`` when untuned — execution then falls back to the
-    module-level default tiles, exactly as before the refactor).
+    module-level default tiles, exactly as before the refactor), and the
+    resolved execution ``backend`` (DESIGN.md §12.3) — a recorded plan
+    pins its backend, so the ledger attributes work per backend and
+    execution never re-decides what planning decided.
     """
     name: str
     m: int
@@ -52,10 +56,11 @@ class PlanEntry:
     offload: bool
     burst: int
     tuned: bool
-    kernel: str                # kernel ops.py will dispatch the main segment to
+    kernel: str                # kernel the main segment dispatches to
     tiling: Optional[Tuple[int, int, int]]   # (block_m, block_n, block_k)
     k_main: int
     k_res: int
+    backend: str = "xla_ref"   # registry backend pinned for the main segment
 
     @property
     def flops(self) -> int:
@@ -77,14 +82,18 @@ class PlanEntry:
 
 def plan_linear(name: str, m: int, k: int, n: int, *, quantized: bool,
                 vmem_budget_kb: int, default_burst: int,
-                tuner=None) -> PlanEntry:
+                tuner=None, backend: Optional[str] = None) -> PlanEntry:
     """Resolve one linear's routing from static shapes — pure apart from
     tuner-cache warming (a miss runs one search whose winner is cached, so
     repeat calls are deterministic dict hits; see §9.3).
 
     This is the single source of truth for dispatch: ``OffloadEngine``
     calls it both when recording a plan (trace time) and when executing
-    eagerly, so plan and execution can never disagree.
+    eagerly, so plan and execution can never disagree. ``backend``
+    optionally pins the main-segment backend (the engine's legacy
+    ``prefer_pallas`` translation); the *resolved* registry backend —
+    after ``REPRO_BACKEND`` forcing and capability resolution
+    (DESIGN.md §12.2) — is recorded in the entry.
     """
     dtype = "q8_0" if quantized else "bf16"
     kern = kernel_for(m, quantized)
@@ -101,14 +110,29 @@ def plan_linear(name: str, m: int, k: int, n: int, *, quantized: bool,
                    optimized=True, agg_units=1)
     tiling = None
     if tuner is not None and offload and k_main:
-        # the main segment is what the kernel sees (ops.py slices x to
-        # k_main before dispatch), so the tiling key uses k_main, not k
+        # the main segment is what the kernel sees (the executor slices x
+        # to k_main before dispatch), so the tiling key uses k_main, not k
         rec = tuner.best_tiling(kern, mp, n, k_main, dtype)
         if rec is not None:
             tiling = (rec.block_m, rec.block_n, rec.block_k)
+    # resolve the main-segment backend at plan time (DESIGN.md §12.3): a
+    # fallback entry runs the always-available reference path (the old
+    # prefer_pallas=False branch of OffloadEngine.execute) — a structural
+    # decision (forceable=False), so REPRO_BACKEND cannot push work the
+    # coverage model kept off the accelerator back onto it
+    if k_main:
+        req = KernelRequest(kernel=kern, m=m, n=n, k=k_main, dtype=dtype,
+                            segment=MAIN, tiling=tiling, forceable=offload)
+        resolved = REGISTRY.resolve(req,
+                                    pin=backend if offload else "xla_ref").name
+    else:
+        # k < burst: there is no main segment — the whole linear runs on
+        # the host residual arm, so that is what the entry (and the
+        # ledger's by_backend attribution) must name
+        resolved = "host_residual"
     return PlanEntry(name=name, m=m, k=k, n=n, dtype=dtype, offload=offload,
                      burst=burst, tuned=tuned, kernel=kern, tiling=tiling,
-                     k_main=k_main, k_res=k_res)
+                     k_main=k_main, k_res=k_res, backend=resolved)
 
 
 @dataclass

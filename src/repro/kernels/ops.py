@@ -1,118 +1,37 @@
-"""Public jit'd wrappers over the Pallas kernels.
+"""Public jit'd wrappers over the Pallas kernels — now a thin shim over the
+backend registry (DESIGN.md §12).
 
-Path selection (DESIGN.md §6.3): on TPU the Pallas kernels run natively; on
-this CPU container they run in ``interpret=True`` for correctness tests, and
-the model/dry-run path uses the XLA implementation of the *same* dequant
-math (``ref.py`` semantics). ``matmul`` is the single entry point the model
-zoo calls; it handles leading batch dims, the mixed-execution split, and the
-sublane padding for skinny decode batches.
+.. deprecated:: kept for API compatibility. ``matmul`` used to select the
+   execution path inline (TPU-vs-interpret, quantized-vs-dense if-ladders);
+   that selection now lives in ``repro.backends``: every segment of the
+   mixed-execution split becomes a ``KernelRequest`` and
+   ``registry.dispatch`` picks the backend (pallas_tpu / xla_ref /
+   host_residual). This module only translates the legacy
+   ``prefer_pallas`` tri-state into a registry pin. New code should call
+   ``repro.backends.executor.matmul`` (or better, route through
+   ``core.offload.OffloadEngine`` so planning and accounting apply).
+
+Path selection (DESIGN.md §6.3, now §12.2 capability resolution): on TPU
+the Pallas kernels run natively; on this CPU container they run in
+``interpret=True`` for correctness tests, and the model/dry-run path uses
+the XLA implementation of the *same* dequant math (``ref.py`` semantics).
+``matmul`` remains the single entry point the model zoo calls; it handles
+leading batch dims, the mixed-execution split, and the sublane padding for
+skinny decode batches — all via the executor.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple, Union
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core.mixed_exec import mixed_matmul, mixed_matmul_q8
-from repro.core.qformats import QBLOCK, QTensor
-from repro.kernels import ref
-from repro.kernels.bf16_matmul import bf16_matmul
-from repro.kernels.q8_matmul import q8_matmul
-from repro.kernels.q8_matvec import q8_matvec
+# submodule imports (not the package) so this shim stays importable while
+# repro.backends' own __init__ is mid-flight (it imports the kernels)
+from repro.backends import executor
+from repro.backends.registry import pin_for_prefer
+from repro.core.qformats import QTensor
 
 Weight = Union[jax.Array, QTensor]
-
-_SUBLANE = 8  # f32 min sublane tile on TPU
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def _flatten_leading(x: jax.Array):
-    lead = x.shape[:-1]
-    m = int(np.prod(lead)) if lead else 1
-    return x.reshape(m, x.shape[-1]), lead
-
-
-def _pad_m(x: jax.Array, mult: int = _SUBLANE):
-    m = x.shape[0]
-    pad = (-m) % mult
-    if pad:
-        x = jnp.pad(x, ((0, pad), (0, 0)))
-    return x, m
-
-
-def _tuned(tuner, kernel: str, m: int, n: int, k: int, dtype: str):
-    """Winning tiling for the *main-segment* shape, or None (tuner absent or
-    nothing admissible under its VMEM budget)."""
-    if tuner is None:
-        return None
-    return tuner.best_tiling(kernel, m, n, k, dtype)
-
-
-def _pallas_q8_main(x2d: jax.Array, wq: QTensor, interpret: bool,
-                    block_k: int, tuner=None, tiling=None) -> jax.Array:
-    """Aligned-segment Q8_0 path: matvec variant for skinny M, tiled matmul
-    otherwise. Handles M/N padding so the kernel only sees full tiles.
-    Tile shapes come (in precedence order) from an explicit ``tiling`` — a
-    trace-time plan entry's resolved ``(block_m, block_n, block_k)``
-    (DESIGN.md §10.1) — else a tuner-cache lookup (DESIGN.md §9.4), else
-    the module-level defaults."""
-    qs2d = wq.flat_qs()
-    n, k = qs2d.shape
-    xp, m = _pad_m(x2d)
-    mp = xp.shape[0]
-    if mp <= 2 * _SUBLANE:
-        rec = tiling or _tuned(tuner, "q8_matvec", mp, n, k, "q8_0")
-        # decode: N tiled at 512 when divisible, else largest divisor tile
-        bn = _block_shape(rec)[1] if rec else _largest_tile(n, 512)
-        out = q8_matvec(xp, qs2d, wq.scales, block_n=bn, interpret=interpret)
-    else:
-        rec = tiling or _tuned(tuner, "q8_matmul", mp, n, k, "q8_0")
-        if rec:
-            bm, bn, bk = _block_shape(rec)
-        else:
-            bm = _largest_tile(mp, 128)
-            bn = _largest_tile(n, 256)
-            bk = _largest_tile(k, block_k, mult=QBLOCK)
-        out = q8_matmul(xp, qs2d, wq.scales, block_m=bm, block_n=bn,
-                        block_k=bk, interpret=interpret)
-    return out[:m]
-
-
-def _pallas_bf16_main(x2d: jax.Array, w: jax.Array, interpret: bool,
-                      block_k: int, tuner=None, tiling=None) -> jax.Array:
-    xp, m = _pad_m(x2d)
-    mp = xp.shape[0]
-    n, k = w.shape
-    rec = tiling or _tuned(tuner, "bf16_matmul", mp, n, k, "bf16")
-    if rec:
-        bm, bn, bk = _block_shape(rec)
-    else:
-        bm = _largest_tile(mp, 128)
-        bn = _largest_tile(n, 256)
-        bk = _largest_tile(k, block_k)
-    return bf16_matmul(xp, w, block_m=bm, block_n=bn, block_k=bk,
-                       interpret=interpret)[:m]
-
-
-def _block_shape(rec) -> Tuple[int, int, int]:
-    """Normalize a tiling source — TuningRecord or plan-entry tuple."""
-    if isinstance(rec, tuple):
-        return rec
-    return rec.block_m, rec.block_n, rec.block_k
-
-
-def _largest_tile(dim: int, cap: int, mult: int = 1) -> int:
-    """Largest t <= cap with t % mult == 0 and dim % t == 0."""
-    t = min(cap, dim)
-    while t > 1 and (dim % t or (mult > 1 and t % mult)):
-        t -= mult if mult > 1 and t % mult == 0 else 1
-    return max(t, 1)
 
 
 def matmul(x: jax.Array, w: Weight, *,
@@ -125,33 +44,16 @@ def matmul(x: jax.Array, w: Weight, *,
     """y = x @ W^T for dense or Q8_0 weights, via the paper's mixed-execution
     split. x: (..., K); W: (N, K) array or QTensor. Returns (..., N) f32.
 
-    prefer_pallas=None -> pallas on TPU, XLA elsewhere (dry-run lowers XLA).
-    ``tiling`` pins the main-segment tile shapes to a trace-time plan
-    entry's resolution (DESIGN.md §10.1) — with it this function is a pure
-    function of its arguments, no cache lookups at execution. ``tuner``
-    (a tuning.Autotuner) instead resolves tiles via cached winners at call
-    time; ``burst``/``block_k`` remain the untuned fallbacks.
+    prefer_pallas=None -> registry capability resolution (pallas on TPU,
+    XLA elsewhere — dry-run lowers XLA); True/False pin the pallas_tpu /
+    xla_ref backend (DESIGN.md §12.2). ``tiling`` pins the main-segment
+    tile shapes to a trace-time plan entry's resolution (DESIGN.md §10.1)
+    — with it this function is a pure function of its arguments, no cache
+    lookups at execution. ``tuner`` (a tuning.Autotuner) instead resolves
+    tiles via cached winners at call time; ``burst``/``block_k`` remain
+    the untuned fallbacks.
     """
-    if prefer_pallas is None:
-        prefer_pallas = _on_tpu()
-    if interpret is None:
-        interpret = not _on_tpu()
-    x2d, lead = _flatten_leading(x)
-
-    if isinstance(w, QTensor):
-        if prefer_pallas:
-            main = functools.partial(_pallas_q8_main, interpret=interpret,
-                                     block_k=block_k, tuner=tuner,
-                                     tiling=tiling)
-            out = mixed_matmul_q8(x2d, w, burst, main)
-        else:
-            out = mixed_matmul_q8(x2d, w, burst, ref.q8_matmul_ref)
-    else:
-        if prefer_pallas:
-            main = functools.partial(_pallas_bf16_main, interpret=interpret,
-                                     block_k=block_k, tuner=tuner,
-                                     tiling=tiling)
-            out = mixed_matmul(x2d, w, burst, main)
-        else:
-            out = mixed_matmul(x2d, w, burst, ref.matmul_bf16_ref)
-    return out.reshape(*lead, out.shape[-1])
+    return executor.matmul(x, w, burst=burst,
+                           backend=pin_for_prefer(prefer_pallas),
+                           interpret=interpret, block_k=block_k,
+                           tuner=tuner, tiling=tiling)

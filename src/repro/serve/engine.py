@@ -367,7 +367,11 @@ class ServeEngine:
             rep["dispatch"] = {"plans": len(self._plans),
                                "plan_hits": self._plans.hits,
                                "plan_misses": self._plans.misses,
-                               "ledger_commits": self.offload.ledger.commits}
+                               "ledger_commits": self.offload.ledger.commits,
+                               # per-backend call attribution from the
+                               # plan-pinned backends (DESIGN.md §12.3)
+                               "by_backend": dict(
+                                   self.offload.stats.by_backend)}
         if self.offload is not None and self.offload.tuner is not None:
             t = self.offload.tuner
             rep["tuning"] = {"cache_hits": t.cache.hits,

@@ -140,8 +140,16 @@ class ContinuousBatchingScheduler:
         mel (F, n_mels) / (1, F, n_mels) for audio engines (padded to the
         pool's ``n_frames``) or an int prompt (S,) / (1, S) for LMs."""
         arr = np.asarray(payload)
-        if arr.ndim == (2 if self._audio else 1):
+        want_ndim = 2 if self._audio else 1
+        if arr.ndim == want_ndim:
             arr = arr[None]
+        if arr.ndim != want_ndim + 1 or arr.shape[0] != 1:
+            # one request per submit: a stacked batch would slot_insert
+            # multiple rows at one slot and corrupt its neighbors' KV state
+            raise ValueError(
+                f"submit() takes ONE request — expected shape "
+                f"({'F, n_mels' if self._audio else 'S'},) or batch-1, "
+                f"got {arr.shape}; submit rows separately")
         if self._audio:
             f = arr.shape[1]
             if f > self.n_frames:

@@ -107,7 +107,8 @@ def measured_cost(cand: TileCandidate, m: int, n: int, k: int, *,
     from repro.kernels.q8_matvec import q8_matvec
 
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        from repro.backends.platform import default_interpret
+        interpret = default_interpret()
     kx, kw = jax.random.split(jax.random.PRNGKey(0))
     x = jax.random.normal(kx, (m, k), jnp.float32)
     w = jax.random.normal(kw, (n, k), jnp.float32) * 0.05

@@ -69,8 +69,8 @@ class Autotuner:
     def _resolved_mode(self) -> str:
         if self.mode != "auto":
             return self.mode
-        import jax
-        return "measured" if jax.default_backend() == "tpu" else "analytic"
+        from repro.backends.platform import on_tpu
+        return "measured" if on_tpu() else "analytic"
 
     # -- search ----------------------------------------------------------
     def search(self, kernel: str, m: int, n: int, k: int) -> Optional[TuningRecord]:

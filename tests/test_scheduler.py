@@ -166,6 +166,19 @@ def test_scheduler_pads_short_utterances(whisper_engine):
         sched.submit(too_long)
 
 
+def test_submit_rejects_stacked_batches(whisper_engine):
+    """One request per submit(): a stacked batch would slot_insert
+    multiple rows at one slot and corrupt its neighbors' KV state."""
+    eng = whisper_engine
+    sched = ContinuousBatchingScheduler(eng, n_slots=2, n_frames=N_FRAMES)
+    stacked = np.zeros((2, N_FRAMES, eng.cfg.n_mels), np.float32)
+    with pytest.raises(ValueError, match="ONE request"):
+        sched.submit(stacked)
+    with pytest.raises(ValueError):
+        sched.submit(np.zeros((N_FRAMES,), np.float32))   # missing mel axis
+    assert sched.n_queued == 0
+
+
 def test_scheduler_streams_tokens_in_order(whisper_engine):
     eng = whisper_engine
     mels = _mels(eng.cfg, 3)
