@@ -46,6 +46,8 @@ BENCHMARK_INDEX = [
      "multi-utterance latency + transcript agreement"),
     ("continuous_batching", "§5.1 E2E / DESIGN.md §11",
      "continuous vs static batching under Poisson arrivals"),
+    ("sharded_serving", "§5.1 E2E / DESIGN.md §13",
+     "mesh-sharded vs single-device serve (token parity + by_device)"),
 ]
 
 

@@ -14,7 +14,7 @@ from benchmarks import (
     backend_matrix, burst_sweep, continuous_batching, coverage_cdf,
     decode_throughput, exec_breakdown, lmm_latency, lmm_power,
     multi_utterance, pdp_cross_platform, profile_shares, q8_reconstruction,
-    tune_sweep)
+    sharded_serving, tune_sweep)
 
 SUITES = [
     ("q8_reconstruction (§4.2)", q8_reconstruction.run, False),
@@ -32,6 +32,7 @@ SUITES = [
     ("multi_utterance (Table 4/5)", multi_utterance.run, True),
     ("continuous_batching (§5.1 / DESIGN.md §11)", continuous_batching.run,
      True),
+    ("sharded_serving (§5.1 / DESIGN.md §13)", sharded_serving.run, True),
 ]
 
 

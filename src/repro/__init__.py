@@ -1,3 +1,4 @@
 """repro: Whisper dot-product kernel offloading (CGLA paper) re-targeted as a
-multi-pod JAX/Pallas TPU framework. See DESIGN.md."""
+multi-pod JAX/Pallas TPU framework. The IMAX -> TPU concept map is
+DESIGN.md §1; each subpackage docstring cites its own section."""
 __version__ = "0.1.0"

@@ -23,6 +23,7 @@ from repro.backends.base import MAIN, RESIDUAL, KernelRequest
 from repro.backends.registry import REGISTRY
 from repro.core.mixed_exec import split_aligned
 from repro.core.qformats import QBLOCK, QTensor
+from repro.sharding import ctx
 from repro.tuning import kernel_for
 
 
@@ -111,4 +112,13 @@ def matmul(x: jax.Array, w, *,
     out = split_matmul(x2d, w, burst, backend=backend, tiling=tiling,
                        tuner=tuner, interpret=interpret, block_k=block_k,
                        forceable=forceable)
-    return out.reshape(*lead, out.shape[-1])
+    out = out.reshape(*lead, out.shape[-1])
+    if lead:
+        # re-anchor the batch dim under sharded serving (DESIGN.md §13):
+        # GSPMD propagation can lose the slot-DP sharding across the
+        # split/add composition, and every linear flows through here, so
+        # this one constraint keeps the whole decode step slot-sharded.
+        # No-op without an active mesh (ctx), and the divisibility
+        # fallback leaves batch-1 prefill activations unconstrained.
+        out = ctx.constrain(out, "batch", *([None] * (out.ndim - 1)))
+    return out

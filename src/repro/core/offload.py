@@ -50,6 +50,14 @@ class OffloadStats:
     tuned_calls: int = 0        # offloads that ran on a tuned burst
     by_kernel: Dict[str, int] = field(default_factory=dict)
     by_backend: Dict[str, int] = field(default_factory=dict)  # DESIGN.md §12.3
+    # per-device FLOP attribution under sharded serving (DESIGN.md §13):
+    # slot-DP splits every linear's batch rows evenly across the mesh, so
+    # each device's share is flops/n_devices (remainder bookkept to dev0);
+    # unsharded entries attribute everything to dev0. The invariant —
+    # sum(by_device) == offloaded + fallback + residual flops — is what
+    # keeps PDP accounting exact under sharding (gated by
+    # benchmarks/sharded_serving.py).
+    by_device: Dict[str, int] = field(default_factory=dict)
 
     def offload_rate(self) -> float:
         t = self.offloaded_calls + self.fallback_calls
@@ -85,6 +93,17 @@ class OffloadLedger:
         s.by_kernel[entry.name] = s.by_kernel.get(entry.name, 0) + times
         s.by_backend[entry.backend] = (s.by_backend.get(entry.backend, 0)
                                        + times)
+        # per-device split (DESIGN.md §13): entry.flops covers the whole
+        # linear (main + residual when offloaded, fallback otherwise), so
+        # the even split keeps sum(by_device) equal to the flop totals
+        n_dev = 1
+        for _, size in (entry.mesh or ()):
+            n_dev *= int(size)
+        share, rem = divmod(entry.flops * times, n_dev)
+        for i in range(n_dev):
+            dev = f"dev{i}"
+            s.by_device[dev] = (s.by_device.get(dev, 0) + share
+                                + (rem if i == 0 else 0))
 
     def commit(self, plan: Optional[DispatchPlan], times: int = 1) -> None:
         """Account ``times`` executions of a traced program's plan."""
@@ -112,6 +131,11 @@ class OffloadEngine:
     interpret: Optional[bool] = None
     tuner: Optional[Autotuner] = None
     ledger: OffloadLedger = field(default_factory=OffloadLedger)
+    # mesh signature of the serving mesh this engine dispatches under
+    # (DESIGN.md §13) — set by ServeEngine when a mesh is attached; stamped
+    # into every PlanEntry so sharded plans never compare equal to
+    # unsharded ones and the ledger can attribute work per device
+    mesh_sig: Optional[tuple] = None
     _recording: Optional[DispatchPlan] = field(default=None, repr=False)
 
     @property
@@ -132,7 +156,8 @@ class OffloadEngine:
         return plan_linear(name, m, k, n, quantized=quantized,
                            vmem_budget_kb=self.vmem_budget_kb,
                            default_burst=self.burst, tuner=self.tuner,
-                           backend=pin_for_prefer(self.prefer_pallas))
+                           backend=pin_for_prefer(self.prefer_pallas),
+                           mesh_sig=self.mesh_sig)
 
     @contextmanager
     def recording(self, plan: DispatchPlan):

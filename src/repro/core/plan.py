@@ -32,6 +32,7 @@ from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
 from repro.backends import MAIN, KernelRequest, REGISTRY
 from repro.core.coverage import MulMat, fits
 from repro.core.mixed_exec import select_burst, split_aligned
+from repro.sharding.rules import mesh_signature
 from repro.tuning import kernel_for, padded_m
 
 
@@ -61,6 +62,11 @@ class PlanEntry:
     k_main: int
     k_res: int
     backend: str = "xla_ref"   # registry backend pinned for the main segment
+    # mesh signature the program was planned under (DESIGN.md §13) — None
+    # for unsharded programs, so sharded/unsharded entries (and therefore
+    # plan signatures) can never compare equal at the same shapes, and the
+    # ledger can split per-device attribution exactly
+    mesh: Optional[Tuple[Tuple[str, int], ...]] = None
 
     @property
     def flops(self) -> int:
@@ -82,7 +88,8 @@ class PlanEntry:
 
 def plan_linear(name: str, m: int, k: int, n: int, *, quantized: bool,
                 vmem_budget_kb: int, default_burst: int,
-                tuner=None, backend: Optional[str] = None) -> PlanEntry:
+                tuner=None, backend: Optional[str] = None,
+                mesh_sig=None) -> PlanEntry:
     """Resolve one linear's routing from static shapes — pure apart from
     tuner-cache warming (a miss runs one search whose winner is cached, so
     repeat calls are deterministic dict hits; see §9.3).
@@ -132,7 +139,8 @@ def plan_linear(name: str, m: int, k: int, n: int, *, quantized: bool,
         resolved = "host_residual"
     return PlanEntry(name=name, m=m, k=k, n=n, dtype=dtype, offload=offload,
                      burst=burst, tuned=tuned, kernel=kern, tiling=tiling,
-                     k_main=k_main, k_res=k_res, backend=resolved)
+                     k_main=k_main, k_res=k_res, backend=resolved,
+                     mesh=mesh_sig)
 
 
 @dataclass
@@ -170,7 +178,7 @@ class DispatchPlan:
 
 
 def plan_key(phase: str, quant: Optional[str], batch: int,
-             *extra: Hashable) -> Tuple[Hashable, ...]:
+             *extra: Hashable, mesh=None) -> Tuple[Hashable, ...]:
     """Canonical plan-cache key: ``(phase, quant, batch, *extra)``.
 
     One key family serves both serving modes (DESIGN.md §11.3): a
@@ -180,8 +188,16 @@ def plan_key(phase: str, quant: Optional[str], batch: int,
     scheduler (serve/scheduler.py) and the one-shot ``transcribe``/
     ``generate`` paths build identical keys and share ``PlanCache``
     entries instead of re-recording.
-    """
-    return (phase, quant, batch, *extra)
+
+    ``mesh`` (a ``Mesh``/``AbstractMesh``, or an already-built
+    ``mesh_signature`` tuple) appends the sharding signature
+    (DESIGN.md §13): the sharded decode step at ``(B, F)`` is a
+    *different* compiled program from its unsharded twin — different
+    layouts, different collectives — so they must never share a cache
+    entry. ``mesh=None`` leaves pre-mesh keys byte-identical."""
+    base = (phase, quant, batch, *extra)
+    sig = mesh_signature(mesh) if hasattr(mesh, "axis_names") else mesh
+    return base if sig is None else (*base, ("mesh", sig))
 
 
 @dataclass

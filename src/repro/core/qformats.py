@@ -1,4 +1,4 @@
-"""GGML-compatible Q8_0 block quantization (paper §3.2, §4.2).
+"""GGML-compatible Q8_0 block quantization (paper §3.2/§4.2; DESIGN.md §3).
 
 Q8_0: blocks of 32 values; per-block scale d = amax/127 stored in fp16;
 quantized values q = round(x/d) in int8. The paper consumes whisper.cpp's

@@ -41,6 +41,28 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _make_mesh(shape, axes)
 
 
+def make_serve_mesh(data: int = 0, model: int = 1):
+    """Serving mesh (DESIGN.md §13): slot-DP over "data", optional TP over
+    "model". ``data=0`` takes every available device onto the data axis —
+    on the forced-host CI platform
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=4``) that is the
+    4-way slot-DP mesh the sharded-serving parity gate runs on. A
+    data-only mesh keeps per-row reduction order identical to the
+    single-device program, which is what makes the token-exact parity
+    contract of benchmarks/sharded_serving.py checkable."""
+    n = len(jax.devices())
+    if data <= 0:
+        if n % model:
+            raise ValueError(f"model={model} does not divide the "
+                             f"{n}-device count; pass data= explicitly "
+                             "to serve on a device subset")
+        data = max(n // model, 1)
+    if data * model > n:
+        raise ValueError(f"mesh ({data}, {model}) needs {data * model} "
+                         f"devices, have {n}")
+    return _make_mesh((data, model), ("data", "model"))
+
+
 def make_smoke_mesh(devices=None):
     """Smallest nontrivial mesh for CPU tests (requires >=4 host devices,
     set via XLA_FLAGS in the test process)."""

@@ -7,7 +7,9 @@ paper's Table 5 / Fig 9 quantities under the TDP-normalized power model).
 ``--continuous`` serves the same requests through the slot-pool
 continuous-batching scheduler instead (DESIGN.md §11): staggered
 admission into a fixed-width slot batch, per-request eviction, streamed
-tokens, and exact per-request ledger/PDP attribution.
+tokens, and exact per-request ledger/PDP attribution. ``--mesh`` serves
+sharded over every visible device (DESIGN.md §13): slot-DP over the
+data axis, per-device FLOP attribution in the energy report.
 """
 from __future__ import annotations
 
@@ -36,6 +38,10 @@ def main(argv=None):
                          "instead of one static batch")
     ap.add_argument("--slots", type=int, default=4,
                     help="slot-pool width for --continuous")
+    ap.add_argument("--mesh", action="store_true",
+                    help="serve sharded over all visible devices "
+                         "(DESIGN.md §13; combine with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N on CPU)")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -45,8 +51,14 @@ def main(argv=None):
                                    max_positions=512)
     offload = OffloadEngine(interpret=True, prefer_pallas=False) \
         if args.offload else None
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh()
+        print(f"serving mesh: {dict(mesh.shape)} over "
+              f"{len(jax.devices())} device(s)")
     engine = ServeEngine(cfg, params, max_len=args.max_new + 32,
-                         quant=args.quant, offload=offload)
+                         quant=args.quant, offload=offload, mesh=mesh)
 
     rng = np.random.default_rng(args.seed)
     if cfg.family == "audio":

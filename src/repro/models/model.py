@@ -231,6 +231,29 @@ def slot_batch_axis(leaf_is_step: bool) -> int:
     return 0 if leaf_is_step else 1
 
 
+def slot_state_specs(state: ServeState, mesh) -> ServeState:
+    """PartitionSpec pytree for a slot-layout ``ServeState``: the slot
+    axis (``slot_batch_axis``) shards over the mesh's "data" axis — the
+    slot pool IS sharded serving's data axis (DESIGN.md §13) — whenever
+    the pool width divides it; every other dim stays replicated. Lives
+    next to ``slot_layout`` because it encodes the same structural
+    invariant (batch on axis 1 of every ``layer_states`` leaf); the
+    divisibility fallback keeps one call site valid on any mesh, in the
+    style of sharding/rules.py."""
+    from jax.sharding import PartitionSpec as P
+    dsize = mesh.shape["data"] if "data" in mesh.axis_names else 1
+
+    def spec(leaf, axis):
+        if dsize <= 1 or leaf.ndim <= axis or leaf.shape[axis] % dsize:
+            return P()
+        return P(*([None] * axis + ["data"]))
+
+    return ServeState(
+        layer_states=jax.tree_util.tree_map(
+            lambda l: spec(l, slot_batch_axis(False)), state.layer_states),
+        step=spec(state.step, slot_batch_axis(True)))
+
+
 def init_serve_state(params: dict, cfg: ModelConfig, batch: int, max_len: int,
                      *, memory: Optional[jax.Array] = None, engine=None,
                      prefill_len: int = 0) -> ServeState:

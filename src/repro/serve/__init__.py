@@ -1,3 +1,7 @@
+"""Serving stack: the jitted ServeEngine with trace-pure offload dispatch
+(DESIGN.md §10), the continuous-batching scheduler over a fixed-shape slot
+KV-cache pool (DESIGN.md §11), and mesh-sharded serving — slot-axis DP
+over the device mesh (DESIGN.md §13)."""
 from repro.serve.engine import GenerationResult, ServeEngine  # noqa: F401
 from repro.serve.kvcache import (  # noqa: F401
     SlotKVPool, slot_insert, slot_reset)

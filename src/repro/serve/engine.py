@@ -28,6 +28,13 @@ Request flow (DESIGN.md §11):
 prefill the whole batch, decode run-to-completion — used by callers that
 already hold a full batch.
 
+Sharded serving (DESIGN.md §13): constructing the engine with a
+``mesh`` places the serving weights per ``sharding/rules.py
+serve_param_specs`` (TP over "model" where divisible, replicated over
+the slot-DP "data" axis), shards the scheduler's slot pool over "data",
+appends the mesh signature to every plan key/entry, and reports
+per-device FLOP attribution (``energy_report()["dispatch"]["by_device"]``).
+
 Token contract: ``GenerationResult.tokens`` holds exactly the ``steps``
 tokens *this request generated*, for both paths — prompt tokens (and the
 SOT token) are never included, and rows that hit EOS before the batch
@@ -51,6 +58,8 @@ from repro.core.plan import DispatchPlan, PlanCache, plan_key, record_plan
 from repro.core.qformats import quantize_tree
 from repro.models import model as model_lib
 from repro.models import whisper as whisper_lib
+from repro.sharding import ctx as shard_ctx
+from repro.sharding import rules as shard_rules
 
 
 @dataclass
@@ -94,6 +103,12 @@ class ServeEngine:
     quant: Optional[str] = None          # None -> cfg.quant
     offload: Optional[OffloadEngine] = None
     eos_id: Optional[int] = 0
+    # serving mesh (DESIGN.md §13): weights are placed per
+    # sharding/rules.serve_param_specs (TP over "model" where divisible,
+    # replicated over the slot-DP "data" axis), the scheduler's slot pool
+    # shards its slot axis over "data", and every plan key/entry carries
+    # the mesh signature. None -> the single-device behavior, unchanged.
+    mesh: Optional[Any] = None
     _serve_params: Any = field(default=None, repr=False)
     _decode_jit: Any = field(default=None, repr=False)
     _step_traces: int = field(default=0, repr=False)
@@ -117,11 +132,28 @@ class ServeEngine:
             whisper_lib.warm_tuning(cfg, self.offload, quant=q)
             self.offload.tuner.save()
 
+        if self.mesh is not None:
+            # place serving weights on the mesh (DESIGN.md §13): TP over
+            # "model" where dims divide, replicated over the slot-DP
+            # "data" axis; Q8_0 qs/scales legs inherit the dense rule
+            specs = shard_rules.serve_param_specs(self._serve_params,
+                                                  self.mesh)
+            self._serve_params = jax.device_put(
+                self._serve_params, shard_rules.named(self.mesh, specs))
+            if self.offload is not None:
+                # stamp the signature into every PlanEntry this engine
+                # resolves — sharded plans never equal unsharded ones
+                self.offload.mesh_sig = shard_rules.mesh_signature(self.mesh)
+
         engine = self.offload
+        mesh = self.mesh
 
         def decode_fn(params, token, state):
-            return model_lib.serve_step(params, cfg, token, state,
-                                        engine=engine)
+            # activation_sharding activates at trace time, which is when
+            # the executor's ctx.constrain batch anchors bake in
+            with shard_ctx.activation_sharding(mesh):
+                return model_lib.serve_step(params, cfg, token, state,
+                                            engine=engine)
 
         # dispatch is trace-pure (DESIGN.md §10.1): jit unconditionally,
         # engine attached or not — routing resolves at trace time and all
@@ -152,19 +184,23 @@ class ServeEngine:
             def prefill_fn(params, mel):
                 """Whisper prefill: encoder once per utterance batch +
                 per-layer cross-K/V projection (paper Fig 1)."""
-                memory = whisper_lib.encode(params, cfg, mel, engine=engine)
-                state = model_lib.init_serve_state(
-                    params, cfg, mel.shape[0], self.max_len, memory=memory,
-                    engine=engine)
-                return memory, state
+                with shard_ctx.activation_sharding(mesh):
+                    memory = whisper_lib.encode(params, cfg, mel,
+                                                engine=engine)
+                    state = model_lib.init_serve_state(
+                        params, cfg, mel.shape[0], self.max_len,
+                        memory=memory, engine=engine)
+                    return memory, state
         else:
             def prefill_fn(params, tokens):
                 """LM prefill: one traced scan of serve_step over the
                 prompt (fills the decode caches, returns last logits)."""
-                state = model_lib.init_serve_state(
-                    params, cfg, tokens.shape[0], self.max_len)
-                return model_lib.prefill(params, cfg, {"tokens": tokens},
-                                         state, engine=engine)
+                with shard_ctx.activation_sharding(mesh):
+                    state = model_lib.init_serve_state(
+                        params, cfg, tokens.shape[0], self.max_len)
+                    return model_lib.prefill(params, cfg,
+                                             {"tokens": tokens},
+                                             state, engine=engine)
 
         self._prefill_fn = prefill_fn
         self._prefill_jit = jax.jit(prefill_fn)
@@ -178,6 +214,15 @@ class ServeEngine:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
     # ------------------------------------------------------------------
+    def _key(self, phase: str, batch: int, *extra: Hashable) -> Hashable:
+        """This engine's canonical plan key: ``(phase, quant, batch,
+        *extra)`` plus the mesh signature when serving sharded
+        (DESIGN.md §13) — the one-shot paths and the scheduler both build
+        keys here, so sharded and unsharded programs at the same shapes
+        land in distinct ``PlanCache`` entries."""
+        return plan_key(phase, self._serve_quant, batch, *extra,
+                        mesh=self.mesh)
+
     def _plan(self, key: Hashable, fn, *args) -> Optional[DispatchPlan]:
         """Routing plan for ``fn(*args)``, cached per shape key
         (DESIGN.md §10.3): repeat requests at the same (batch, seq,
@@ -235,9 +280,8 @@ class ServeEngine:
         Returns one result per request; ``tokens`` are the generated
         tokens only (see the module-level token contract)."""
         b, s = prompts.shape
-        q = self._serve_quant
         tokens = jnp.asarray(prompts)
-        prefill_plan = self._plan(plan_key("prefill", q, b, s),
+        prefill_plan = self._plan(self._key("prefill", b, s),
                                   self._prefill_fn, self._serve_params,
                                   tokens)
         t0 = time.perf_counter()
@@ -245,7 +289,7 @@ class ServeEngine:
         jax.block_until_ready(logits)
         first = self._argmax(logits[:, -1])[:, None]
         prefill_s = time.perf_counter() - t0
-        step_plan = self._plan(plan_key("step", q, b), self._decode_fn,
+        step_plan = self._plan(self._key("step", b), self._decode_fn,
                                self._serve_params, first, state)
         r = self._greedy_loop(state, first, max_new)
         if self.offload is not None:
@@ -277,7 +321,7 @@ class ServeEngine:
             if tuner.searches > n0:
                 tuner.save()
         mel_j = jnp.asarray(mel)
-        prefill_plan = self._plan(plan_key("prefill", q, b, f),
+        prefill_plan = self._plan(self._key("prefill", b, f),
                                   self._prefill_fn, self._serve_params,
                                   mel_j)
         t0 = time.perf_counter()
@@ -285,7 +329,7 @@ class ServeEngine:
         jax.block_until_ready(memory)
         prefill_s = time.perf_counter() - t0
         first = jnp.full((b, 1), sot_id, jnp.int32)
-        step_plan = self._plan(plan_key("step", q, b, f), self._decode_fn,
+        step_plan = self._plan(self._key("step", b, f), self._decode_fn,
                                self._serve_params, first, state)
         r = self._greedy_loop(state, first, max_new)
         if self.offload is not None:
@@ -371,7 +415,12 @@ class ServeEngine:
                                # per-backend call attribution from the
                                # plan-pinned backends (DESIGN.md §12.3)
                                "by_backend": dict(
-                                   self.offload.stats.by_backend)}
+                                   self.offload.stats.by_backend),
+                               # per-device FLOP attribution under sharded
+                               # serving (DESIGN.md §13); sums to the
+                               # offloaded+fallback+residual flop total
+                               "by_device": dict(
+                                   self.offload.stats.by_device)}
         if self.offload is not None and self.offload.tuner is not None:
             t = self.offload.tuner
             rep["tuning"] = {"cache_hits": t.cache.hits,

@@ -24,6 +24,14 @@ Free slots keep decoding garbage — that is the fixed-shape contract (the
 batch always computes all ``n_slots`` rows; the paper's CGLA keeps its
 lanes busy the same way) — and every insert overwrites the entire slot
 row, so stale state can never leak into a new request.
+
+Sharded pools (DESIGN.md §13): with a serving mesh attached, the slot
+axis shards over the mesh's "data" axis (``model.slot_state_specs``) and
+the pool becomes the data axis of sharded serving. The splice jits get
+``out_shardings`` pinned to the pool's sharding, so admission/eviction
+never un-shards the state and nothing is gathered to the host between
+steps; ``acquire`` becomes shard-aware — it admits into the slot range of
+the least-loaded device so active slots spread across the mesh.
 """
 from __future__ import annotations
 
@@ -34,6 +42,7 @@ import jax.numpy as jnp
 
 from repro.models import model as model_lib
 from repro.models.model import ServeState
+from repro.sharding import rules as shard_rules
 
 
 def slot_insert(pool: ServeState, slot: jax.Array,
@@ -93,10 +102,14 @@ class SlotKVPool:
     the cross-KV rows are sized to the fixed ``n_frames`` capacity every
     admitted utterance is padded to). ``acquire``/``release`` manage the
     free list; ``insert`` is the splice a scheduler calls on admission.
+    ``mesh`` shards the slot axis over the mesh's "data" axis
+    (DESIGN.md §13); slots then partition into ``n_shards`` device-local
+    ranges of ``shard_size`` and ``acquire`` balances admission across
+    them.
     """
 
     def __init__(self, cfg, params, n_slots: int, max_len: int,
-                 n_frames: Optional[int] = None):
+                 n_frames: Optional[int] = None, mesh=None):
         self.n_slots = n_slots
         self.max_len = max_len
         self.n_frames = n_frames
@@ -115,15 +128,53 @@ class SlotKVPool:
             st = model_lib.init_serve_state(params, cfg, n_slots, max_len)
         self.state: ServeState = model_lib.slot_layout(st, n_slots)
         self._free: List[int] = list(range(n_slots))
+        self.mesh = mesh
+        self.n_shards = 1
+        self._insert_jit = _INSERT_JIT
+        self._reset_jit = _RESET_JIT
+        if mesh is not None:
+            specs = model_lib.slot_state_specs(self.state, mesh)
+            shardings = shard_rules.named(mesh, specs)
+            self.state = jax.device_put(self.state, shardings)
+            # per-pool jits with out_shardings pinned: the splice can
+            # never silently un-shard the pool, whatever GSPMD would
+            # propagate from the batch-1 request operand
+            self._insert_jit = jax.jit(slot_insert, out_shardings=shardings)
+            self._reset_jit = jax.jit(slot_reset, out_shardings=shardings)
+            dsize = (mesh.shape["data"]
+                     if "data" in mesh.axis_names else 1)
+            if dsize > 1 and n_slots % dsize == 0:
+                self.n_shards = dsize
+        self.shard_size = n_slots // self.n_shards
 
     # -- free-slot bookkeeping (host side) -----------------------------
     @property
     def n_free(self) -> int:
         return len(self._free)
 
+    def slot_shard(self, slot: int) -> int:
+        """Device-shard index owning ``slot`` (0 when unsharded)."""
+        return slot // self.shard_size
+
     def acquire(self) -> int:
-        """Claim the lowest free slot index (raises when full)."""
-        return self._free.pop(0)
+        """Claim a free slot (raises when full). Unsharded pools take the
+        lowest index; sharded pools admit into the device-local slot range
+        with the fewest active occupants (ties -> lowest index), so load
+        spreads across the mesh instead of piling onto shard 0
+        (DESIGN.md §13)."""
+        if self.n_shards == 1:
+            return self._free.pop(0)
+        free_per_shard = [0] * self.n_shards
+        for s in self._free:
+            free_per_shard[self.slot_shard(s)] += 1
+
+        def load(s: int):
+            # fewest active == most free; prefer lower slot index on ties
+            return (-free_per_shard[self.slot_shard(s)], s)
+
+        pick = min(self._free, key=load)
+        self._free.remove(pick)
+        return pick
 
     def release(self, slot: int, reset: bool = True) -> None:
         """Return ``slot`` to the free list. ``reset=False`` skips zeroing
@@ -131,11 +182,12 @@ class SlotKVPool:
         reuse and freed slots' garbage is never read (the scheduler's hot
         path uses it; a reset is a full pool-state copy per eviction)."""
         if reset:
-            self.state = _RESET_JIT(self.state, slot)
+            self.state = self._reset_jit(self.state, slot)
         self._free.append(slot)
         self._free.sort()
 
     # -- state ops ------------------------------------------------------
     def insert(self, slot: int, req_state: ServeState) -> None:
-        """Splice a batch-1 prefill state into ``slot`` (jitted)."""
-        self.state = _INSERT_JIT(self.state, slot, req_state)
+        """Splice a batch-1 prefill state into ``slot`` (jitted; sharded
+        pools keep their slot-axis sharding via pinned out_shardings)."""
+        self.state = self._insert_jit(self.state, slot, req_state)

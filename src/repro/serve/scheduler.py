@@ -29,9 +29,13 @@ Mechanics per step (DESIGN.md §11.2):
             the next admission; ``kvcache.slot_reset`` exists for callers
             that want freed rows zeroed eagerly).
 
-Plan keys are shared with the one-shot paths via ``core.plan.plan_key``
+Plan keys are shared with the one-shot paths via ``ServeEngine._key``
 (DESIGN.md §11.3): the slot-batched step at ``(n_slots, n_frames)`` IS
 the static decode step at that shape, so no plan is ever re-recorded.
+With a serving mesh attached (DESIGN.md §13) the pool's slot axis shards
+over the mesh's "data" axis, admission targets device-local slot ranges
+(``SlotKVPool.acquire`` balances across shards), and every plan key
+carries the mesh signature so sharded steps never reuse unsharded plans.
 """
 from __future__ import annotations
 
@@ -44,7 +48,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.plan import plan_key
 from repro.serve.engine import GenerationResult, ServeEngine
 from repro.serve.kvcache import SlotKVPool
 
@@ -100,7 +103,8 @@ class ContinuousBatchingScheduler:
                              "fixed mel-frame capacity)")
         self.n_frames = n_frames
         self.pool = SlotKVPool(cfg, engine._serve_params, n_slots,
-                               engine.max_len, n_frames=n_frames)
+                               engine.max_len, n_frames=n_frames,
+                               mesh=engine.mesh)
         self.queue: Deque[_QueuedRequest] = deque()
         self.finished: Dict[int, GenerationResult] = {}
         self._active: Dict[int, _ActiveSlot] = {}      # slot -> request
@@ -108,6 +112,15 @@ class ContinuousBatchingScheduler:
         # step's output back without a host->device upload per step
         self._tokens = jnp.zeros((n_slots, 1), jnp.int32)
         self._done0 = jnp.zeros((n_slots,), bool)      # step_fn done input
+        if engine.mesh is not None and self.pool.n_shards > 1:
+            # pin the per-slot buffers to the pool's slot sharding so the
+            # sharded decode step reads device-local tokens (DESIGN.md §13)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            mesh = engine.mesh
+            self._tokens = jax.device_put(
+                self._tokens, NamedSharding(mesh, P("data", None)))
+            self._done0 = jax.device_put(
+                self._done0, NamedSharding(mesh, P("data")))
         self._next_rid = 0
         self._step_plan_ready = False
         self._step_plan = None
@@ -178,13 +191,12 @@ class ContinuousBatchingScheduler:
         eng = self.engine
         while self.queue and self.pool.n_free:
             req = self.queue.popleft()
-            q = eng._serve_quant
             payload = jnp.asarray(req.payload)
             if self._audio:
-                key = plan_key("prefill", q, 1, self.n_frames)
+                key = eng._key("prefill", 1, self.n_frames)
                 times = 1
             else:
-                key = plan_key("prefill", q, 1, payload.shape[1])
+                key = eng._key("prefill", 1, payload.shape[1])
                 times = payload.shape[1]
             plan = eng._plan(key, eng._prefill_fn, eng._serve_params, payload)
             t0 = time.perf_counter()
@@ -212,7 +224,7 @@ class ContinuousBatchingScheduler:
             return
         eng = self.engine
         extra = (self.n_frames,) if self._audio else ()
-        key = plan_key("step", eng._serve_quant, self.n_slots, *extra)
+        key = eng._key("step", self.n_slots, *extra)
         token = jnp.zeros((self.n_slots, 1), jnp.int32)
         self._step_plan = eng._plan(key, eng._decode_fn, eng._serve_params,
                                     token, self.pool.state)

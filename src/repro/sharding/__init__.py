@@ -1,4 +1,7 @@
+"""Sharding layer: PartitionSpec rules (DESIGN.md §7), the activation-
+constraint context (``ctx``), and the serving-mesh helpers that shard the
+slot pool's batch axis over the data axis (DESIGN.md §13)."""
 from repro.sharding.rules import (  # noqa: F401
-    batch_specs, cache_specs, named, param_specs, spec_for_path,
-    train_state_specs,
+    batch_specs, cache_specs, mesh_signature, named, param_specs,
+    serve_param_specs, spec_for_path, train_state_specs,
 )

@@ -274,6 +274,44 @@ def train_state_specs(train_state, mesh: Mesh):
     return param_specs(train_state, mesh)
 
 
+# ---------------------------------------------------------------------------
+# Serving specs (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+def _strip_axes(spec: P, drop=("data",)) -> P:
+    entries = []
+    for e in spec:
+        axes = e if isinstance(e, tuple) else ((e,) if e is not None else ())
+        kept = tuple(a for a in axes if a not in drop)
+        entries.append(kept if len(kept) > 1 else
+                       (kept[0] if kept else None))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def serve_param_specs(params, mesh: Mesh):
+    """Serving-weight specs: the training rules with the FSDP ("data") axis
+    stripped, so weights are tensor-parallel over "model" where divisible
+    and **replicated** over the slot-DP data axis (DESIGN.md §13). FSDP
+    weight sharding is the wrong trade for decode — it turns every layer's
+    weight read into a per-step all-gather on the latency path, while the
+    slot pool's batch axis is what actually scales with traffic."""
+    return jax.tree_util.tree_map(
+        _strip_axes, param_specs(params, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def mesh_signature(mesh) -> Optional[Tuple[Tuple[str, int], ...]]:
+    """Hashable identity of a mesh's (axis, size) layout — the sharding
+    component of plan keys and ``PlanEntry.mesh`` (DESIGN.md §13): a
+    sharded program and its unsharded twin at the same shapes must never
+    share a plan-cache entry. ``None`` for ``mesh=None`` (unsharded), so
+    pre-mesh keys are unchanged. Works on ``Mesh`` and ``AbstractMesh``."""
+    if mesh is None:
+        return None
+    return tuple((str(a), int(mesh.shape[a])) for a in mesh.axis_names)
+
+
 def named(mesh: Mesh, spec_tree):
     """PartitionSpec pytree -> NamedSharding pytree."""
     return jax.tree_util.tree_map(

@@ -1,0 +1,210 @@
+"""Sharded serving (DESIGN.md §13): mesh plan-key/plan-entry separation,
+per-device ledger attribution, slot-state specs and serve-param specs (all
+in-process on abstract meshes — this test process keeps its 1-CPU device
+view, per conftest), plus the real 4-device parity/retrace gate in a
+subprocess with the forced-host platform flag."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.offload import OffloadEngine, OffloadLedger
+from repro.core.plan import plan_key, plan_linear
+from repro.launch.mesh import abstract_mesh
+from repro.models import model as M
+from repro.models.model import ServeState
+from repro.sharding import rules
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+MESH4 = abstract_mesh((4, 1), ("data", "model"))
+SIG4 = (("data", 4), ("model", 1))
+
+
+# ---------------------------------------------------------------------------
+# mesh signature + plan keys (DESIGN.md §13.3)
+# ---------------------------------------------------------------------------
+def test_mesh_signature():
+    assert rules.mesh_signature(None) is None
+    assert rules.mesh_signature(MESH4) == SIG4
+    multi = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    assert rules.mesh_signature(multi) == (("pod", 2), ("data", 16),
+                                           ("model", 16))
+
+
+def test_plan_key_mesh_separation():
+    """Same shapes on a 1-device view vs a 4-device mesh must build
+    DISTINCT plan-cache keys — and mesh=None keys stay byte-identical to
+    the pre-mesh key family (the §11.3 sharing contract)."""
+    base = plan_key("step", "q8_0", 4, 16)
+    assert base == ("step", "q8_0", 4, 16)
+    assert plan_key("step", "q8_0", 4, 16, mesh=None) == base
+    keyed = plan_key("step", "q8_0", 4, 16, mesh=MESH4)
+    assert keyed != base
+    assert keyed[:len(base)] == base
+    # signature tuples are accepted directly (what engines cache)
+    assert plan_key("step", "q8_0", 4, 16, mesh=SIG4) == keyed
+    # different mesh geometry -> different key
+    mesh2 = abstract_mesh((2, 2), ("data", "model"))
+    assert plan_key("step", "q8_0", 4, 16, mesh=mesh2) != keyed
+
+
+def test_plan_entry_mesh_separates_signatures():
+    kw = dict(quantized=True, vmem_budget_kb=8 * 1024, default_burst=256)
+    e1 = plan_linear("l", 4, 384, 384, **kw)
+    em = plan_linear("l", 4, 384, 384, mesh_sig=SIG4, **kw)
+    assert e1.mesh is None and em.mesh == SIG4
+    assert e1 != em                       # frozen dataclass equality
+    assert e1 == plan_linear("l", 4, 384, 384, **kw)   # still deterministic
+
+
+# ---------------------------------------------------------------------------
+# per-device ledger attribution (DESIGN.md §13.3)
+# ---------------------------------------------------------------------------
+def test_ledger_by_device_sums_to_flop_total():
+    led = OffloadLedger()
+    kw = dict(vmem_budget_kb=8 * 1024, default_burst=256, mesh_sig=SIG4)
+    offloaded = plan_linear("a", 4, 384, 384, quantized=True, **kw)
+    fallback = plan_linear("b", 4096, 4096, 4096, quantized=False, **kw)
+    assert offloaded.offload and not fallback.offload
+    led.account(offloaded, times=3)
+    led.account(fallback, times=2)
+    s = led.totals
+    total = s.offloaded_flops + s.fallback_flops + s.residual_flops
+    assert sum(s.by_device.values()) == total
+    assert set(s.by_device) == {f"dev{i}" for i in range(4)}
+
+
+def test_ledger_by_device_unsharded_is_dev0():
+    led = OffloadLedger()
+    e = plan_linear("a", 4, 384, 384, quantized=True,
+                    vmem_budget_kb=8 * 1024, default_burst=256)
+    led.account(e, times=2)
+    assert set(led.totals.by_device) == {"dev0"}
+    assert led.totals.by_device["dev0"] == e.flops * 2
+
+
+def test_offload_engine_stamps_mesh_sig():
+    eng = OffloadEngine(mesh_sig=SIG4, prefer_pallas=False)
+    assert eng.plan_entry(4, 384, 384, quantized=True).mesh == SIG4
+
+
+# ---------------------------------------------------------------------------
+# slot-state + serve-param specs (DESIGN.md §13.1)
+# ---------------------------------------------------------------------------
+def _slot_state(n_slots):
+    # data leaves carry the batch on axis 1 already (the slot_layout
+    # invariant); slot_layout broadcasts only the <=1-dim counters
+    st = ServeState(
+        layer_states={"k": jnp.zeros((2, n_slots, 8, 2, 4)),
+                      "length": jnp.zeros((2,), jnp.int32)},
+        step=jnp.zeros((), jnp.int32))
+    return M.slot_layout(st, n_slots)
+
+
+def test_slot_state_specs_shard_slot_axis():
+    st = _slot_state(4)
+    specs = M.slot_state_specs(st, MESH4)
+    assert specs.step == P("data")
+    assert specs.layer_states["k"] == P(None, "data")
+    assert specs.layer_states["length"] == P(None, "data")
+
+
+def test_slot_state_specs_indivisible_replicate():
+    st = _slot_state(3)       # 3 slots on a 4-way data axis -> replicated
+    specs = M.slot_state_specs(st, MESH4)
+    assert specs.step == P()
+    assert specs.layer_states["k"] == P()
+
+
+def test_serve_param_specs_strip_fsdp_axis():
+    pod = abstract_mesh((16, 16), ("data", "model"))
+    params = {"attn": {"q": {"w": jnp.ones((256, 128))}},
+              "norm": {"scale": jnp.ones((128,))}}
+    train = rules.param_specs(params, pod)
+    serve = rules.serve_param_specs(params, pod)
+    assert train["attn"]["q"]["w"] == P("model", "data")
+    assert serve["attn"]["q"]["w"] == P("model")   # replicated over data
+    assert serve["norm"]["scale"] == P()
+
+
+# ---------------------------------------------------------------------------
+# the real thing: 4 forced host devices in a subprocess (conftest keeps
+# this process at its 1-CPU view, like tests/test_dryrun_integration.py)
+# ---------------------------------------------------------------------------
+_PARITY_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, numpy as np
+assert len(jax.devices()) == 4
+from repro.configs.registry import get_smoke_config
+from repro.core.offload import OffloadEngine
+from repro.launch.mesh import make_serve_mesh
+from repro.models import model as model_lib
+from repro.serve.engine import ServeEngine
+
+cfg = get_smoke_config("whisper-tiny")
+params = model_lib.init_params(jax.random.PRNGKey(0), cfg, 64)
+rng = np.random.default_rng(0)
+mels = [rng.standard_normal((1, 16, cfg.n_mels)).astype(np.float32)
+        for _ in range(6)]
+max_news = [int(rng.integers(3, 10)) for _ in range(6)]
+
+def serve(mesh):
+    eng = ServeEngine(cfg, params, max_len=24, quant="q8_0", eos_id=-1,
+                      offload=OffloadEngine(interpret=True,
+                                            prefer_pallas=False),
+                      mesh=mesh)
+    sched = eng.scheduler(n_slots=4, n_frames=16)
+    rids = [sched.submit(m, max_new=mn) for m, mn in zip(mels, max_news)]
+    got = sched.run()
+    return eng, sched, [got[r].tokens for r in rids]
+
+eng1, s1, t1 = serve(None)
+engm, sm, tm = serve(make_serve_mesh())
+# token-exact parity on the same arrival trace
+assert t1 == tm, "sharded decode diverged from single-device tokens"
+# zero retraces: ONE step trace per engine across the whole schedule
+assert eng1._step_traces == 1 and engm._step_traces == 1, (
+    eng1._step_traces, engm._step_traces)
+# same shapes, distinct plan-cache entries (mesh signature)
+assert not set(eng1._plans.plans) & set(engm._plans.plans)
+# pool really sharded, admission balanced across device-local ranges
+assert sm.pool.n_shards == 4 and sm.pool.shard_size == 1
+st = engm.offload.stats
+total = st.offloaded_flops + st.fallback_flops + st.residual_flops
+by_dev = engm.energy_report([])["dispatch"]["by_device"]
+assert sum(by_dev.values()) == total and len(by_dev) == 4
+print("PARITY_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_parity_zero_retrace_subprocess():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    cp = subprocess.run([sys.executable, "-c", _PARITY_SCRIPT],
+                        capture_output=True, text=True, timeout=560,
+                        env=env)
+    assert cp.returncode == 0, cp.stdout[-2000:] + cp.stderr[-2000:]
+    assert "PARITY_OK" in cp.stdout
+
+
+def test_shard_aware_acquire_balances():
+    """Device-local admission (DESIGN.md §13.2): with 8 slots on 4 shards,
+    the first 4 acquisitions land one per shard; release/reacquire prefers
+    the emptiest shard. Pure free-list logic — no devices needed."""
+    from repro.serve.kvcache import SlotKVPool
+    pool = object.__new__(SlotKVPool)
+    pool.n_slots, pool.n_shards, pool.shard_size = 8, 4, 2
+    pool._free = list(range(8))
+    picks = [pool.acquire() for _ in range(4)]
+    assert sorted(p // 2 for p in picks) == [0, 1, 2, 3]
+    # shard 0 frees both its slots -> next admission goes there
+    pool._free.extend([0, 1])
+    pool._free.sort()
+    assert pool.acquire() // 2 == 0

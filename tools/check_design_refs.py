@@ -1,26 +1,41 @@
 #!/usr/bin/env python
-"""Docs check: every ``DESIGN.md §X[.Y]`` cross-reference in the codebase
-must resolve to a section heading in DESIGN.md.
+"""Docs-drift gate, bidirectional (CI):
 
-A reference ``§6.3`` is satisfied by a heading containing ``§6.3``; a bare
-``§6`` is satisfied by ``§6`` itself (subsection headings do not satisfy
-their parent). Run from the repo root:
+forward   every ``DESIGN.md §X[.Y]`` cross-reference in the codebase must
+          resolve to a section heading in DESIGN.md. A reference ``§6.3``
+          is satisfied by a heading containing ``§6.3``; a bare ``§6`` is
+          satisfied by ``§6`` itself (subsection headings do not satisfy
+          their parent).
+reverse   every top-level ``## §N`` section of DESIGN.md must be cited at
+          least once from the scanned tree — a section nothing points at
+          is drift in the other direction (stale design text, or code
+          that silently stopped honoring it).
+docstring every module under src/repro/serve/ and src/repro/backends/
+          must open with a module docstring citing its DESIGN.md section
+          (the serving/backend layers are where the design doc and the
+          code co-evolve fastest).
+
+Run from the repo root:
 
   python tools/check_design_refs.py [--root PATH]
 
-Exit code 0 when all references resolve; 1 otherwise (CI gate).
+Exit code 0 when all three checks pass; 1 otherwise (CI gate).
 """
 from __future__ import annotations
 
 import argparse
+import ast
 import os
 import re
 import sys
 
 REF_RE = re.compile(r"DESIGN\.md\s+§([0-9]+(?:\.[0-9]+)?)")
 HEADING_RE = re.compile(r"^#{1,6}\s+§([0-9]+(?:\.[0-9]+)?)\b", re.M)
+TOP_HEADING_RE = re.compile(r"^##\s+§([0-9]+)\b", re.M)
 SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
 SCAN_EXTS = (".py", ".md")
+DOCSTRING_DIRS = (os.path.join("src", "repro", "serve"),
+                  os.path.join("src", "repro", "backends"))
 
 
 def collect_refs(root: str):
@@ -45,9 +60,37 @@ def collect_refs(root: str):
 def collect_anchors(root: str):
     path = os.path.join(root, "DESIGN.md")
     if not os.path.exists(path):
-        return None
+        return None, None
     with open(path, encoding="utf-8") as f:
-        return set(HEADING_RE.findall(f.read()))
+        text = f.read()
+    return set(HEADING_RE.findall(text)), set(TOP_HEADING_RE.findall(text))
+
+
+def check_docstrings(root: str):
+    """Modules that must cite their DESIGN section from their docstring.
+    Returns [(relpath, why)] failures."""
+    bad = []
+    for d in DOCSTRING_DIRS:
+        base = os.path.join(root, d)
+        if not os.path.isdir(base):
+            continue
+        for fn in sorted(os.listdir(base)):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(base, fn)
+            rel = os.path.relpath(path, root)
+            with open(path, encoding="utf-8", errors="replace") as f:
+                src = f.read()
+            try:
+                doc = ast.get_docstring(ast.parse(src))
+            except SyntaxError:
+                bad.append((rel, "does not parse"))
+                continue
+            if not doc:
+                bad.append((rel, "no module docstring"))
+            elif not REF_RE.search(doc):
+                bad.append((rel, "docstring cites no DESIGN.md section"))
+    return bad
 
 
 def main(argv=None) -> int:
@@ -55,22 +98,44 @@ def main(argv=None) -> int:
     ap.add_argument("--root", default=os.path.dirname(
         os.path.dirname(os.path.abspath(__file__))))
     args = ap.parse_args(argv)
-    anchors = collect_anchors(args.root)
+    anchors, top_sections = collect_anchors(args.root)
     if anchors is None:
         print("FAIL: DESIGN.md does not exist")
         return 1
     refs = collect_refs(args.root)
-    missing = {s: locs for s, locs in refs.items() if s not in anchors}
     print(f"{sum(len(v) for v in refs.values())} references to "
           f"{len(refs)} distinct sections; {len(anchors)} anchors in "
           "DESIGN.md")
+    failed = False
+
+    missing = {s: locs for s, locs in refs.items() if s not in anchors}
     if missing:
+        failed = True
         for sec in sorted(missing):
             print(f"FAIL: §{sec} referenced but has no DESIGN.md heading:")
             for loc in missing[sec][:5]:
                 print(f"    {loc}")
+
+    # reverse direction: a top-level section counts as cited if it — or
+    # any of its subsections — is referenced somewhere in the tree
+    cited_tops = {s.split(".")[0] for s in refs}
+    uncited = sorted(top_sections - cited_tops, key=int)
+    if uncited:
+        failed = True
+        for sec in uncited:
+            print(f"FAIL: DESIGN.md ## §{sec} is cited by nothing in "
+                  f"{'/'.join(SCAN_DIRS)} — stale section or missing "
+                  "docstring reference")
+
+    for rel, why in check_docstrings(args.root):
+        failed = True
+        print(f"FAIL: {rel}: {why} (serve/ and backends/ modules must "
+              "cite their DESIGN.md section)")
+
+    if failed:
         return 1
-    print("ok: all DESIGN.md section references resolve")
+    print("ok: all DESIGN.md references resolve, every top-level section "
+          "is cited, and serve/backends docstrings cite their sections")
     return 0
 
 
