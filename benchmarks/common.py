@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import json
 import os
+import tempfile
 import time
 from typing import Any, Callable, Dict
 
@@ -11,10 +12,22 @@ OUT_DIR = os.path.join(ROOT, "experiments", "bench")
 
 
 def save(name: str, payload: Dict[str, Any]) -> str:
+    """Persist a benchmark result atomically (tmp + os.replace): a crash
+    or Ctrl-C mid-dump must never leave a truncated JSON that report.py
+    or a CI artifact upload then chokes on (DESIGN.md §14.2 applies the
+    same discipline to the tuning cache and calibration store)."""
     os.makedirs(OUT_DIR, exist_ok=True)
     path = os.path.join(OUT_DIR, f"{name}.json")
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=str)
+    fd, tmp = tempfile.mkstemp(dir=OUT_DIR, prefix=f".{name}.",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=1, default=str)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
     return path
 
 

@@ -35,6 +35,8 @@ BENCHMARK_INDEX = [
     ("lmm_power", "Fig 7", "power vs LMM size; 32KB PDP argument"),
     ("burst_sweep", "Fig 10 / §4.4", "burst PDP/EDP sweep + tile analog"),
     ("tune_sweep", "Fig 7+10", "(vmem_budget x block_k) autotuning grid"),
+    ("calibration_error", "DESIGN.md §14",
+     "analytic-vs-measured replay calibration + CI error gate"),
     ("lmm_latency", "Fig 11 / §5.1", "LMM size -> projected E2E latency"),
     ("exec_breakdown", "Fig 12", "EXEC/LOAD/CONF decomposition"),
     ("pdp_cross_platform", "Fig 9", "TDP-normalized cross-platform PDP"),

@@ -11,8 +11,8 @@ import time
 import traceback
 
 from benchmarks import (
-    backend_matrix, burst_sweep, continuous_batching, coverage_cdf,
-    decode_throughput, exec_breakdown, lmm_latency, lmm_power,
+    backend_matrix, burst_sweep, calibration_error, continuous_batching,
+    coverage_cdf, decode_throughput, exec_breakdown, lmm_latency, lmm_power,
     multi_utterance, pdp_cross_platform, profile_shares, q8_reconstruction,
     sharded_serving, tune_sweep)
 
@@ -21,6 +21,8 @@ SUITES = [
     ("coverage_cdf (Table 2/6)", coverage_cdf.run, False),
     ("burst_sweep (Fig 10)", burst_sweep.run, False),
     ("tune_sweep (Fig 7+10 co-design grid)", tune_sweep.run, False),
+    ("calibration_error (DESIGN.md §14 replay calibration)",
+     calibration_error.run, False),
     ("lmm_power (Fig 7)", lmm_power.run, False),
     ("lmm_latency (Fig 11)", lmm_latency.run, False),
     ("pdp_cross_platform (Fig 9)", pdp_cross_platform.run, False),

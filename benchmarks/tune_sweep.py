@@ -9,29 +9,50 @@ cell reports cost plus PDP/EDP proxies where the power term scales with the
 budget (the Fig 7 local-memory power trend, DESIGN.md §9.5). Cells where no
 tiling fits the budget print "-" — Table 6's coverage cliff.
 
+Column provenance (DESIGN.md §14): every cost/PDP/speedup column is
+labeled with its source.  ``analytic`` columns are roofline *projections*
+priced with datasheet constants — not wall-clock measurements, and the
+output says so explicitly.  When a replay calibration exists
+(``benchmarks/calibration_error.py`` writes one; ``--calibration PATH``
+points at another), the same columns are priced with fitted per-backend
+constants and labeled ``calibrated``.  ``--measured`` adds true wall-clock
+replay columns next to either; ``--measure`` switches the *ranking* cost
+model itself to wall-clock (slow, only meaningful on real backends).
+
 Usage:
-  PYTHONPATH=src python -m benchmarks.tune_sweep [--measure] [--iters N]
-      [--save-cache PATH]
+  PYTHONPATH=src python -m benchmarks.tune_sweep [--measure] [--measured]
+      [--iters N] [--save-cache PATH] [--calibration PATH]
 
 Flags:
   --measure          wall-clock the winning candidates through the real
                      kernels (interpret mode off-TPU; slow) instead of the
                      deterministic analytic roofline model.
+  --measured         add measured wall-clock replay columns (and a
+                     measured speedup) to the tuned-vs-default table.
   --iters N          timing iterations per measured cell (default 3).
   --save-cache PATH  persist the tuned winners as a JSON tuning cache
                      consumable by core.offload.OffloadEngine.
+  --calibration PATH calibrated-coefficients JSON to price costs with
+                     (default: auto-detect the file
+                     benchmarks/calibration_error.py last wrote).
 """
 from __future__ import annotations
 
 import argparse
+import os
 
 from benchmarks.common import fmt_table, save
 from repro.core import energy
-from repro.backends.pallas_tpu import _largest_tile
 from repro.tuning import (
-    VMEM_FULL_BYTES, Autotuner, analytic_cost, budget_grid, measured_cost,
-    padded_m, sweep_grid)
-from repro.tuning.space import BLOCK_K_CANDIDATES, TileCandidate
+    VMEM_FULL_BYTES, Autotuner, CalibratedCoefficients, TileCandidate,
+    budget_grid, default_candidate, measured_cost, padded_m, preferred_cost,
+    replay_candidate, sweep_grid)
+from repro.tuning.space import BLOCK_K_CANDIDATES
+
+#: where calibration_error.py persists fitted coefficients
+DEFAULT_CALIBRATION = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "experiments", "bench", "calibration_coeffs.json")
 
 # Whisper-tiny's dominant GEMM classes (paper Table 1: d=384, d_ff=1536;
 # 1500 encoder frames pad to 1504, decode batch pads to 8).
@@ -58,40 +79,26 @@ def _vmem_power_w(budget_bytes: int) -> float:
     return energy.TPU_V5E_W * (0.8 + 0.2 * budget_bytes / VMEM_FULL_BYTES)
 
 
-def _default_candidate(kernel: str, m: int, n: int, k: int) -> TileCandidate:
-    """The hard-coded tiling ops.py would pick with no tuner attached."""
-    from repro.kernels.bf16_matmul import vmem_claim_bytes as bf16_claim
-    from repro.kernels.q8_matmul import vmem_claim_bytes as q8mm_claim
-    from repro.kernels.q8_matvec import vmem_claim_bytes as q8mv_claim
-    if kernel == "q8_matvec":
-        bn = _largest_tile(n, 512)
-        return TileCandidate(kernel, m, bn, k,
-                             q8mv_claim(b=m, k=k, block_n=bn))
-    bm = _largest_tile(m, 128)
-    bn = _largest_tile(n, 256)
-    bk = _largest_tile(k, 256, mult=32 if kernel.startswith("q8") else 1)
-    claim = q8mm_claim if kernel == "q8_matmul" else bf16_claim
-    return TileCandidate(kernel, bm, bn, bk,
-                         claim(block_m=bm, block_n=bn, block_k=bk))
-
-
-def _cost(cand, m, n, k, measure: bool, iters: int):
-    if measure:
-        return measured_cost(cand, m, n, k, iters=iters)
-    return analytic_cost(cand, m, n, k)
-
-
 def run(measure: bool = False, iters: int = 3,
-        save_cache: str | None = None) -> dict:
+        save_cache: str | None = None,
+        measured: bool = False,
+        calibration: str | None = None) -> dict:
+    cal = CalibratedCoefficients.load_or_none(
+        calibration if calibration is not None else DEFAULT_CALIBRATION)
+    # the label every cost column carries — the provenance of the numbers
+    label = "measured" if measure else ("calibrated" if cal else "analytic")
     mode = "measured" if measure else "analytic"
     name, kernel, m, n, k = ("enc.ffn.down", "q8_matmul",
                              padded_m(1500), 384, 1536)
     block_ks = [b for b in BLOCK_K_CANDIDATES if k % b == 0]
 
     # --- the (vmem_budget x block_k) grid for the headline shape ---------
-    cost_fn = ((lambda c, cm, cn, ck: measured_cost(c, cm, cn, ck,
-                                                    iters=iters))
-               if measure else analytic_cost)
+    if measure:
+        def cost_fn(c, cm, cn, ck):
+            return measured_cost(c, cm, cn, ck, iters=iters)
+    else:
+        def cost_fn(c, cm, cn, ck):
+            return preferred_cost(c, cm, cn, ck, calibration=cal)
     cells = sweep_grid(kernel, m, n, k, budgets=BUDGETS,
                        block_ks=block_ks, cost_fn=cost_fn)
     by_cell = {(b, r.cand.block_k): r for b, r in cells}
@@ -112,7 +119,7 @@ def run(measure: bool = False, iters: int = 3,
                 "tiling": best.cand.as_kwargs()})
             row.append(f"{best.pdp_j(p)*1e6:.2f}")
         grid_rows.append(row)
-    print(f"(vmem_budget x block_k) PDP grid [uJ, {mode}] — "
+    print(f"(vmem_budget x block_k) PDP grid [uJ, {label}] — "
           f"{name} (M={m}, N={n}, K={k})")
     print(fmt_table(grid_rows, ["budget", *(f"bk={b}" for b in block_ks)]))
     best_cell = min(grid_cells, key=lambda c: c["pdp_j"])
@@ -122,36 +129,62 @@ def run(measure: bool = False, iters: int = 3,
 
     # --- tuned vs hard-coded defaults over the tiny shape set ------------
     tuner = Autotuner(vmem_budget_bytes=VMEM_FULL_BYTES // 2,
-                      mode=mode, cache_path=save_cache)
+                      mode=mode, cache_path=save_cache, calibration=cal)
+    headers = ["class", "kernel", "MxNxK", "tuned tiling",
+               f"tuned[{label}]", f"default[{label}]", f"speedup[{label}]"]
+    if measured:
+        headers += ["tuned[wall]", "default[wall]", "speedup[wall]"]
     cmp_rows, comparisons = [], []
     for sname, skern, sm, sn, sk in TINY_SHAPES:
         dtype = "q8_0" if skern.startswith("q8") else "bf16"
         rec = tuner.best_tiling(skern, sm, sn, sk, dtype)
-        dflt = _default_candidate(skern, sm, sn, sk)
-        dcost = _cost(dflt, sm, sn, sk, measure, iters).cost_s
+        dflt = default_candidate(skern, sm, sn, sk)
+        dcost = cost_fn(dflt, sm, sn, sk).cost_s
         tcost = rec.cost_s if rec else dcost
+        tcand = (TileCandidate(skern, rec.block_m, rec.block_n, rec.block_k,
+                               rec.vmem_bytes) if rec else dflt)
         tiling = (f"({rec.block_m},{rec.block_n},{rec.block_k})"
                   if rec else "default")
-        cmp_rows.append([sname, skern, f"{sm}x{sn}x{sk}", tiling,
-                         f"{tcost*1e6:.2f}", f"{dcost*1e6:.2f}",
-                         f"{dcost/tcost:.2f}x" if tcost else "-"])
-        comparisons.append({"name": sname, "kernel": skern,
-                            "shape": [sm, sn, sk],
-                            "tuned_cost_s": tcost, "default_cost_s": dcost,
-                            "tuned": rec.tiling() if rec else None})
-    print(f"\ntuned vs hard-coded defaults [{mode} cost, us] — "
+        row = [sname, skern, f"{sm}x{sn}x{sk}", tiling,
+               f"{tcost*1e6:.2f}", f"{dcost*1e6:.2f}",
+               f"{dcost/tcost:.2f}x" if tcost else "-"]
+        comp = {"name": sname, "kernel": skern, "shape": [sm, sn, sk],
+                "cost_label": rec.source if rec else label,
+                "tuned_cost_s": tcost, "default_cost_s": dcost,
+                "tuned": rec.tiling() if rec else None}
+        if measured:
+            tmeas = replay_candidate(tcand, sm, sn, sk, dtype,
+                                     reps=iters).time_s
+            dmeas = replay_candidate(dflt, sm, sn, sk, dtype,
+                                     reps=iters).time_s
+            row += [f"{tmeas*1e6:.2f}", f"{dmeas*1e6:.2f}",
+                    f"{dmeas/tmeas:.2f}x"]
+            comp.update(tuned_measured_s=tmeas, default_measured_s=dmeas)
+        cmp_rows.append(row)
+        comparisons.append(comp)
+    print(f"\ntuned vs hard-coded defaults [{label} cost, us] — "
           "whisper-tiny shapes")
-    print(fmt_table(cmp_rows, ["class", "kernel", "MxNxK", "tuned tiling",
-                               "tuned", "default", "speedup"]))
+    print(fmt_table(cmp_rows, headers))
     regressions = [c for c in comparisons
                    if c["tuned_cost_s"] > c["default_cost_s"] * 1.001]
     print(f"tuned beats-or-matches default on "
           f"{len(comparisons)-len(regressions)}/{len(comparisons)} shapes")
+    if label == "analytic":
+        print("NOTE: all costs/speedups above are analytic roofline "
+              "PROJECTIONS, not wall-clock measurements. Run "
+              "benchmarks/calibration_error.py to fit calibrated "
+              "constants, or pass --measured for replay columns.")
+    elif label == "calibrated":
+        backend = cal.default_backend
+        print(f"costs are calibrated predictions (replay-fitted constants "
+              f"for backend={backend}, DESIGN.md §14.2)")
 
     if save_cache:
         print(f"tuning cache saved to {tuner.save()} "
               f"({len(tuner.cache)} entries)")
-    out = {"mode": mode, "grid_shape": {"name": name, "m": m, "n": n, "k": k},
+    out = {"mode": mode, "cost_label": label,
+           "calibration_backend": cal.default_backend if cal else None,
+           "grid_shape": {"name": name, "m": m, "n": n, "k": k},
            "grid": grid_cells, "pdp_optimal": best_cell,
            "comparisons": comparisons,
            "tuned_never_worse": not regressions}
@@ -163,11 +196,19 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--measure", action="store_true",
                     help="wall-clock the kernels instead of analytic cost")
+    ap.add_argument("--measured", action="store_true",
+                    help="add wall-clock replay columns to the "
+                         "tuned-vs-default table")
     ap.add_argument("--iters", type=int, default=3)
     ap.add_argument("--save-cache", default=None,
                     help="path to persist the JSON tuning cache")
+    ap.add_argument("--calibration", default=None,
+                    help="calibrated-coefficients JSON (default: "
+                         "auto-detect experiments/bench/"
+                         "calibration_coeffs.json)")
     args = ap.parse_args(argv)
-    run(measure=args.measure, iters=args.iters, save_cache=args.save_cache)
+    run(measure=args.measure, iters=args.iters, save_cache=args.save_cache,
+        measured=args.measured, calibration=args.calibration)
 
 
 if __name__ == "__main__":

@@ -1,11 +1,22 @@
 """Burst/tile autotuning — the paper's LMM-size x burst-length co-design
 sweep (§4.4/§5.4, Fig 7/10) as a reusable subsystem (DESIGN.md §9):
-candidate enumeration under a VMEM budget (space), analytic/measured cost
-(cost), a persistent JSON winner cache (cache), and the dispatch-facing
-Autotuner (tuner) consumed by core.offload.OffloadEngine."""
+candidate enumeration under a VMEM budget (space), analytic/calibrated/
+measured cost (cost), a persistent JSON winner cache (cache), the
+dispatch-facing Autotuner (tuner) consumed by core.offload.OffloadEngine,
+and the measured-replay calibration loop (replay + calibrate,
+DESIGN.md §14) that fits the analytic model's constants per backend."""
 from repro.tuning.cache import TuningCache, TuningKey, TuningRecord  # noqa: F401
-from repro.tuning.cost import CostReport, analytic_cost, measured_cost  # noqa: F401
+from repro.tuning.calibrate import (  # noqa: F401
+    BackendCoefficients, CalibratedCoefficients, fit, fit_backend,
+    rank_correlation, sibling_path)
+from repro.tuning.cost import (  # noqa: F401
+    CostReport, activate_calibration_file, analytic_cost, analytic_features,
+    calibrated_cost, get_calibration, measured_cost, preferred_cost,
+    set_calibration)
+from repro.tuning.replay import (  # noqa: F401
+    ReplaySample, make_operands, replay, replay_candidate, trimmed_mean)
 from repro.tuning.space import (  # noqa: F401
-    VMEM_FULL_BYTES, TileCandidate, budget_grid, enumerate_candidates)
+    VMEM_FULL_BYTES, TileCandidate, budget_grid, default_candidate,
+    enumerate_candidates)
 from repro.tuning.tuner import (  # noqa: F401
     Autotuner, kernel_for, padded_m, sweep_grid)

@@ -45,7 +45,7 @@ class TuningRecord:
     block_k: int
     cost_s: float
     vmem_bytes: int
-    source: str                   # analytic | measured
+    source: str                   # analytic | calibrated | measured
 
     def tiling(self) -> Dict[str, int]:
         return {"block_m": self.block_m, "block_n": self.block_n,
@@ -53,10 +53,11 @@ class TuningRecord:
 
 
 def _better(a: TuningRecord, b: TuningRecord) -> TuningRecord:
-    """Merge policy: measured beats analytic; within a source, lower cost."""
-    rank = {"measured": 0, "analytic": 1}
-    ka = (rank.get(a.source, 2), a.cost_s)
-    kb = (rank.get(b.source, 2), b.cost_s)
+    """Merge policy: measured beats calibrated beats analytic (more
+    grounded sources win, DESIGN.md §14.2); within a source, lower cost."""
+    rank = {"measured": 0, "calibrated": 1, "analytic": 2}
+    ka = (rank.get(a.source, 3), a.cost_s)
+    kb = (rank.get(b.source, 3), b.cost_s)
     return a if ka <= kb else b
 
 

@@ -20,16 +20,26 @@ Wall-clock measurement runs the real kernel via ``kernels.ops`` plumbing and
 is only meaningful on a TPU backend; in ``interpret=True`` CPU mode its
 numbers reflect the interpreter, so the tuner defaults to the analytic model
 off-TPU (DESIGN.md §6.3 path selection applies to tuning too).
+
+A third source sits between the two: **calibrated** costs (DESIGN.md §14)
+reuse the analytic model's own FLOP/byte/step accounting
+(``analytic_features``) but with per-backend *effective* constants fitted
+from replay measurements (``tuning/calibrate.py``).  ``preferred_cost`` is
+the seam the tuner ranks through: it transparently prefers calibrated
+coefficients when a calibration is active (explicitly passed, or loaded
+process-wide via ``set_calibration`` / ``activate_calibration_file``) and
+falls back to the analytic roofline otherwise.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Tuple
 
 from repro.core import energy
 from repro.core.qformats import QBLOCK
 from repro.roofline.analysis import HW, V5E
+from repro.tuning.calibrate import BackendCoefficients, CalibratedCoefficients
 from repro.tuning.space import TileCandidate
 
 # Per-grid-step launch overhead. On real hardware this is sub-microsecond
@@ -45,7 +55,7 @@ class CostReport:
     memory_s: float
     launch_s: float
     cost_s: float
-    source: str                   # analytic | measured
+    source: str                   # analytic | calibrated | measured
 
     def pdp_j(self, power_w: float = energy.TPU_V5E_W) -> float:
         return energy.pdp(self.cost_s, power_w)
@@ -65,9 +75,13 @@ def _pad(v: int, mult: int) -> int:
     return -(-v // mult) * mult
 
 
-def analytic_cost(cand: TileCandidate, m: int, n: int, k: int, *,
-                  hw: HW = V5E, x_bytes: int = 2) -> CostReport:
-    """Deterministic roofline cost of running (M,N,K) with this tiling."""
+def analytic_features(cand: TileCandidate, m: int, n: int, k: int, *,
+                      x_bytes: int = 2) -> Tuple[float, float, float]:
+    """The analytic model's raw accounting for one candidate:
+    ``(flops, bytes_hbm, grid_steps)``.  Shared verbatim between the
+    analytic roofline below and the calibrated model (DESIGN.md §14.2) so
+    calibration fits constants against *exactly* the features the ranking
+    later uses."""
     bm, bn, bk = cand.block_m, cand.block_n, cand.block_k
     # MXU padding tax: tiles off the (sublane=8, lane=128) grid compute on
     # padded operands — the space admits e.g. bm=94 (1504's best divisor)
@@ -86,11 +100,78 @@ def analytic_cost(cand: TileCandidate, m: int, n: int, k: int, *,
     bytes_hbm = (n_passes_x * m * k * x_bytes
                  + m_passes_w * n * k * w_bpe
                  + m * n * 4)
+    return flops, float(bytes_hbm), float(steps)
+
+
+def analytic_cost(cand: TileCandidate, m: int, n: int, k: int, *,
+                  hw: HW = V5E, x_bytes: int = 2) -> CostReport:
+    """Deterministic roofline cost of running (M,N,K) with this tiling."""
+    flops, bytes_hbm, steps = analytic_features(cand, m, n, k,
+                                                x_bytes=x_bytes)
     compute_s = flops / hw.peak_flops
     memory_s = bytes_hbm / hw.hbm_bw
     launch_s = steps * GRID_STEP_OVERHEAD_S
     return CostReport(cand, compute_s, memory_s, launch_s,
                       max(compute_s, memory_s) + launch_s, "analytic")
+
+
+def calibrated_cost(cand: TileCandidate, m: int, n: int, k: int, *,
+                    coeffs: BackendCoefficients,
+                    x_bytes: int = 2) -> CostReport:
+    """The analytic accounting priced with replay-fitted *effective*
+    constants for one backend (DESIGN.md §14.2).  Additive form — see
+    ``tuning/calibrate.py`` for why the calibrated model sums terms where
+    the analytic one takes ``max``."""
+    flops, bytes_hbm, steps = analytic_features(cand, m, n, k,
+                                                x_bytes=x_bytes)
+    compute_s, memory_s, launch_s = coeffs.predict_parts(
+        flops, bytes_hbm, steps)
+    return CostReport(cand, compute_s, memory_s, launch_s,
+                      compute_s + memory_s + launch_s, "calibrated")
+
+
+# -- active calibration (process-wide, opt-in) ------------------------------
+_ACTIVE_CALIBRATION: Optional[CalibratedCoefficients] = None
+
+
+def set_calibration(cal: Optional[CalibratedCoefficients]
+                    ) -> Optional[CalibratedCoefficients]:
+    """Install (or clear, with None) the process-wide calibration that
+    ``preferred_cost`` consults.  Returns the previous one so callers can
+    restore it (tests, scoped experiments)."""
+    global _ACTIVE_CALIBRATION
+    prev, _ACTIVE_CALIBRATION = _ACTIVE_CALIBRATION, cal
+    return prev
+
+
+def get_calibration() -> Optional[CalibratedCoefficients]:
+    return _ACTIVE_CALIBRATION
+
+
+def activate_calibration_file(path: str) -> Optional[CalibratedCoefficients]:
+    """Load a coefficients file and install it process-wide.  Missing or
+    corrupt files warn and leave the current calibration untouched
+    (calibration is an optimization, like the tuning cache)."""
+    cal = CalibratedCoefficients.load_or_none(path)
+    if cal is not None:
+        set_calibration(cal)
+    return cal
+
+
+def preferred_cost(cand: TileCandidate, m: int, n: int, k: int, *,
+                   backend: Optional[str] = None,
+                   calibration: Optional[CalibratedCoefficients] = None,
+                   hw: HW = V5E, x_bytes: int = 2) -> CostReport:
+    """The ranking seam (DESIGN.md §14.2): calibrated cost when
+    coefficients for ``backend`` exist (``calibration`` argument first,
+    else the process-wide active calibration; ``backend=None`` means the
+    calibration's default backend), analytic roofline otherwise."""
+    cal = calibration if calibration is not None else _ACTIVE_CALIBRATION
+    coeffs = cal.for_backend(backend) if cal is not None else None
+    if coeffs is not None:
+        return calibrated_cost(cand, m, n, k, coeffs=coeffs,
+                               x_bytes=x_bytes)
+    return analytic_cost(cand, m, n, k, hw=hw, x_bytes=x_bytes)
 
 
 def measured_cost(cand: TileCandidate, m: int, n: int, k: int, *,

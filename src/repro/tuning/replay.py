@@ -1,0 +1,150 @@
+"""Compile-and-replay harness for cost-model calibration
+(DESIGN.md §14.1).
+
+One replay lowers a single candidate ``KernelRequest`` to a jitted
+program *through the §12 backend registry* — the same resolution path
+(forced > pinned > capability) production dispatch takes, so
+``REPRO_BACKEND`` forcing is honored and ``pallas_tpu`` / ``xla_ref`` /
+``host_residual`` each get measurements of the program they would really
+run — then executes it ``reps`` times after warmup and reports the
+trimmed-mean wall-clock next to the analytic model's FLOP/byte/step
+accounting for the same candidate (the features ``calibrate.fit``
+regresses against).
+
+Operands are generated from a fixed PRNG seed, so two replays of the same
+request build bit-identical programs on identical inputs: the output
+checksum is a determinism witness (tests/test_calibration.py).  Weights
+are closed over (not traced arguments), matching how serving weights are
+donated constants; only the activation is a traced input.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+from repro.tuning.cost import analytic_features
+from repro.tuning.space import TileCandidate
+
+
+@dataclass(frozen=True)
+class ReplaySample:
+    """One replayed (candidate, backend) measurement."""
+    kernel: str
+    m: int
+    n: int
+    k: int
+    dtype: str                            # "q8_0" | "bf16"
+    backend: str                          # backend that ACTUALLY ran
+    tiling: Optional[Tuple[int, int, int]]
+    times_s: Tuple[float, ...]            # raw per-rep wall-clocks
+    warmup: int
+    checksum: float                       # f64 sum of the output
+    flops: float                          # analytic accounting of the
+    bytes_hbm: float                      # same candidate (calibrate.fit
+    steps: float                          # feature columns)
+
+    @property
+    def time_s(self) -> float:
+        return trimmed_mean(self.times_s)
+
+
+def trimmed_mean(ts: Sequence[float], trim: float = 0.25) -> float:
+    """Mean of the middle after dropping samples from each end — robust
+    to the one slow outlier a shared CI machine produces.  At least one
+    sample is always dropped per side once n >= 3, so the tiny rep
+    counts the smoke gate uses (N=3 -> the median, N=5 -> mean of the
+    middle three) stay outlier-immune too."""
+    if not ts:
+        raise ValueError("no timing samples")
+    xs = sorted(ts)
+    drop = max(int(len(xs) * trim), 1) if len(xs) >= 3 else 0
+    mid = xs[drop:len(xs) - drop]
+    return sum(mid) / len(mid)
+
+
+def make_operands(kernel: str, m: int, n: int, k: int, dtype: str,
+                  seed: int = 0):
+    """Deterministic (x, w) operands for a replay: f32 activation, dense
+    or Q8_0-quantized weight, from a fixed PRNG seed."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.qformats import quantize_q8_0
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (n, k), jnp.float32) * 0.05
+    if dtype == "q8_0":
+        w = quantize_q8_0(w)
+    return x, w
+
+
+def replay(kernel: str, m: int, n: int, k: int, dtype: str, *,
+           backend: Optional[str] = None,
+           tiling: Optional[Tuple[int, int, int]] = None,
+           reps: int = 5, warmup: int = 2,
+           interpret: Optional[bool] = None,
+           seed: int = 0) -> ReplaySample:
+    """Measure one candidate on one backend.
+
+    ``backend`` is a registry *pin*, not a force: an active
+    ``REPRO_BACKEND`` (or ``REGISTRY.force`` context) outranks it, exactly
+    as in production dispatch, and the sample records the backend that
+    actually ran (DESIGN.md §12.2 precedence).  ``tiling`` pins the main
+    segment's ``(block_m, block_n, block_k)``; the analytic features are
+    derived from the same tiling (or the whole-problem default when
+    None), so fit rows stay feature-consistent with what executed.
+    """
+    import jax
+    import numpy as np
+
+    from repro.backends.base import MAIN, KernelRequest
+    from repro.backends.registry import REGISTRY
+
+    req = KernelRequest(kernel=kernel, m=m, n=n, k=k, dtype=dtype,
+                        segment=MAIN, tiling=tiling, interpret=interpret)
+    resolved = REGISTRY.resolve(req, pin=backend)
+    fn = resolved.build(req)
+    x, w = make_operands(kernel, m, n, k, dtype, seed=seed)
+
+    # weights closed over (serving treats them as resident constants);
+    # the activation is the traced argument
+    jfn = jax.jit(lambda xx: fn(xx, w))
+    out = None
+    for _ in range(max(warmup, 1)):            # first call compiles
+        out = jax.block_until_ready(jfn(x))
+    times = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(jfn(x))
+        times.append(time.perf_counter() - t0)
+
+    cand = _feature_candidate(kernel, m, n, k, tiling)
+    flops, bytes_hbm, steps = analytic_features(cand, m, n, k)
+    return ReplaySample(
+        kernel=kernel, m=m, n=n, k=k, dtype=dtype,
+        backend=resolved.name, tiling=tiling,
+        times_s=tuple(times), warmup=warmup,
+        checksum=float(np.asarray(out, dtype=np.float64).sum()),
+        flops=flops, bytes_hbm=bytes_hbm, steps=steps)
+
+
+def replay_candidate(cand: TileCandidate, m: int, n: int, k: int,
+                     dtype: str, **kw) -> ReplaySample:
+    """``replay`` for a space-enumerated ``TileCandidate``."""
+    return replay(cand.kernel, m, n, k, dtype,
+                  tiling=(cand.block_m, cand.block_n, cand.block_k), **kw)
+
+
+def _feature_candidate(kernel: str, m: int, n: int, k: int,
+                       tiling: Optional[Tuple[int, int, int]]
+                       ) -> TileCandidate:
+    """The TileCandidate the analytic features are computed for: the
+    pinned tiling when one was replayed, else the same whole-problem
+    default ``space.default_candidate`` dispatch would fall back to."""
+    if tiling is not None:
+        bm, bn, bk = tiling
+        return TileCandidate(kernel, bm, bn, bk, 0)
+    from repro.tuning.space import default_candidate
+    return default_candidate(kernel, m, n, k)

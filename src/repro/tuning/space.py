@@ -19,9 +19,6 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List
 
 from repro.core.qformats import QBLOCK
-from repro.kernels.bf16_matmul import vmem_claim_bytes as _bf16_claim
-from repro.kernels.q8_matmul import vmem_claim_bytes as _q8mm_claim
-from repro.kernels.q8_matvec import vmem_claim_bytes as _q8mv_claim
 
 # Full per-core VMEM on the v5e class (pallas_guide: ~16 MB/core); tilings
 # are rejected well before this by the sweep's budgets.
@@ -67,6 +64,13 @@ def _divisors(dim: int, floor: int, cap: int, mult: int = 1) -> List[int]:
 
 
 def _claim_fn(kernel: str) -> Callable[..., int]:
+    # imported lazily: repro.kernels pulls in the backend registry, which
+    # imports repro.tuning back — at call time both are fully initialized,
+    # at module-import time this would be a cycle (and the analytic tuning
+    # path stays import-light, as cost.py promises)
+    from repro.kernels.bf16_matmul import vmem_claim_bytes as _bf16_claim
+    from repro.kernels.q8_matmul import vmem_claim_bytes as _q8mm_claim
+    from repro.kernels.q8_matvec import vmem_claim_bytes as _q8mv_claim
     return {"q8_matmul": _q8mm_claim,
             "q8_matvec": _q8mv_claim,
             "bf16_matmul": _bf16_claim}[kernel]
@@ -106,6 +110,35 @@ def enumerate_candidates(kernel: str, m: int, n: int, k: int, *,
                 if v <= vmem_budget_bytes:
                     out.append(TileCandidate(kernel, bm, bn, bk, v))
     return out
+
+
+def _largest_tile(dim: int, cap: int, mult: int = 1) -> int:
+    """Largest t <= cap with t % mult == 0 and dim % t == 0 (the same
+    fallback rule ``backends/pallas_tpu.py`` applies untuned)."""
+    t = min(cap, dim)
+    while t > 1 and (dim % t or (mult > 1 and t % mult)):
+        t -= mult if mult > 1 and t % mult == 0 else 1
+    return max(t, 1)
+
+
+def default_candidate(kernel: str, m: int, n: int, k: int, *,
+                      x_bytes: int = 2) -> TileCandidate:
+    """The tiling dispatch falls back to with no tuner attached — the
+    hard-coded caps of ``backends/pallas_tpu.py`` expressed as a
+    ``TileCandidate`` so benchmarks (tune_sweep's baseline column) and
+    replay features (DESIGN.md §14.1) can price the untuned path with the
+    same machinery as tuned ones."""
+    claim = _claim_fn(kernel)
+    if kernel == "q8_matvec":
+        bn = _largest_tile(n, 512)
+        return TileCandidate(kernel, m, bn, k,
+                             claim(b=m, k=k, block_n=bn, x_bytes=x_bytes))
+    bm = _largest_tile(m, 128)
+    bn = _largest_tile(n, 256)
+    bk = _largest_tile(k, 256, mult=QBLOCK if kernel.startswith("q8") else 1)
+    return TileCandidate(kernel, bm, bn, bk,
+                         claim(block_m=bm, block_n=bn, block_k=bk,
+                               x_bytes=x_bytes))
 
 
 def budget_grid(min_kb: int = 16, max_bytes: int = VMEM_FULL_BYTES,

@@ -15,6 +15,13 @@ Modes:
   measured — wall-clock the top analytic candidates on the real backend.
   auto     — measured on TPU, analytic elsewhere (ops.py's path-selection
              rule applied to tuning).
+
+In analytic/auto-analytic mode the ranking goes through
+``cost.preferred_cost``: when a replay calibration exists — passed in, or
+found as the versioned JSON sibling of ``cache_path``
+(``calibrate.sibling_path``, DESIGN.md §14.2) — candidates are priced
+with fitted per-backend constants instead of datasheet ones, so tuner
+output on a calibrated host reflects measurements, not projections.
 """
 from __future__ import annotations
 
@@ -22,7 +29,9 @@ from dataclasses import dataclass, field
 from typing import Iterable, List, Optional, Sequence, Tuple
 
 from repro.tuning.cache import TuningCache, TuningKey, TuningRecord
-from repro.tuning.cost import CostReport, analytic_cost, measured_cost
+from repro.tuning.calibrate import CalibratedCoefficients, sibling_path
+from repro.tuning.cost import (
+    CostReport, analytic_cost, measured_cost, preferred_cost)
 from repro.tuning.space import (
     VMEM_FULL_BYTES, TileCandidate, enumerate_candidates)
 
@@ -53,6 +62,10 @@ class Autotuner:
     vmem_budget_bytes: int = VMEM_FULL_BYTES // 2
     mode: str = "auto"                    # analytic | measured | auto
     cache_path: Optional[str] = None
+    # replay-fitted cost coefficients (DESIGN.md §14.2): explicit, or
+    # auto-loaded from calibration_path / the cache_path sibling file
+    calibration: Optional[CalibratedCoefficients] = None
+    calibration_path: Optional[str] = None
     searches: int = 0                     # full sweeps run (cache misses)
     # shapes where nothing fits the budget — memoized in-process so the
     # hot dispatch path never repeats a fruitless sweep (negatives are
@@ -64,6 +77,10 @@ class Autotuner:
             raise ValueError(f"unknown tuning mode {self.mode!r}")
         if self.cache_path:
             self.cache.merge(TuningCache.load_or_empty(self.cache_path))
+        if self.calibration is None:
+            path = self.calibration_path or (
+                sibling_path(self.cache_path) if self.cache_path else None)
+            self.calibration = CalibratedCoefficients.load_or_none(path)
 
     # -- mode resolution -------------------------------------------------
     def _resolved_mode(self) -> str:
@@ -82,7 +99,8 @@ class Autotuner:
             kernel, m, n, k, vmem_budget_bytes=self.vmem_budget_bytes)
         if not cands:
             return None
-        reports = [analytic_cost(c, m, n, k) for c in cands]
+        reports = [preferred_cost(c, m, n, k, calibration=self.calibration)
+                   for c in cands]
         reports.sort(key=lambda r: r.cost_s)
         if self._resolved_mode() == "measured":
             reports = [measured_cost(r.cand, m, n, k)

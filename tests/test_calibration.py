@@ -1,0 +1,287 @@
+"""Measured-replay calibration (DESIGN.md §14): fit recovery on synthetic
+timings, calibrated ranking vs the closed form, replay determinism and
+registry-forcing semantics, and the versioned coefficients store."""
+import json
+import math
+
+import pytest
+
+from repro.tuning import (
+    Autotuner, BackendCoefficients, CalibratedCoefficients, TuningCache,
+    TuningKey, TuningRecord, analytic_features, calibrated_cost,
+    enumerate_candidates, fit, fit_backend, get_calibration, preferred_cost,
+    rank_correlation, replay, set_calibration, sibling_path, trimmed_mean)
+from repro.tuning.calibrate import SCHEMA_VERSION
+from repro.tuning.replay import ReplaySample
+
+
+# ---------------------------------------------------------------------------
+# fit: recovery of known constants from synthetic samples
+# ---------------------------------------------------------------------------
+class _Syn:
+    """Duck-typed fit sample: analytic features + a synthetic time."""
+    def __init__(self, flops, bytes_hbm, steps, time_s, backend="syn"):
+        self.flops, self.bytes_hbm, self.steps = flops, bytes_hbm, steps
+        self.time_s, self.backend = time_s, backend
+
+
+def _synthetic(eff_flops, eff_bw, overhead_s, backend=None):
+    """Noise-free samples generated FROM the additive model the fit
+    assumes — least squares must recover the constants exactly.  Tuple
+    rows for ``fit``; duck-typed ``_Syn`` objects for ``fit_backend``."""
+    out = []
+    for f, b, s in [(1e9, 1e6, 10), (4e9, 2e6, 40), (1e8, 8e6, 5),
+                    (2e10, 5e5, 300), (5e8, 4e6, 80), (9e9, 9e6, 17)]:
+        t = f / eff_flops + b / eff_bw + s * overhead_s
+        out.append(_Syn(f, b, s, t, backend) if backend
+                   else (f, b, s, t))
+    return out
+
+
+def test_fit_recovers_synthetic_constants():
+    want = (3.2e13, 5.1e11, 2.5e-7)
+    got = fit(_synthetic(*want), backend="syn")
+    assert got.backend == "syn"
+    assert got.n_samples == 6
+    for g, w in zip((got.eff_flops, got.eff_bw, got.overhead_s), want):
+        assert abs(g - w) / w < 1e-6
+    assert got.median_rel_err < 1e-9       # the fit explains its own data
+
+
+def test_fit_needs_three_samples():
+    with pytest.raises(ValueError, match="need >= 3"):
+        fit(_synthetic(1e13, 1e11, 1e-7)[:2], backend="syn")
+
+
+def test_fit_backend_filters():
+    mixed = (_synthetic(1e13, 1e11, 1e-7, backend="a")
+             + _synthetic(9e13, 9e11, 9e-7, backend="b"))
+    ca = fit_backend(mixed, "a")
+    assert ca.n_samples == 6
+    assert abs(ca.eff_flops - 1e13) / 1e13 < 1e-6
+
+
+def test_predict_matches_parts():
+    c = BackendCoefficients("x", 1e13, 1e11, 1e-7)
+    parts = c.predict_parts(1e9, 1e6, 10)
+    assert c.predict(1e9, 1e6, 10) == pytest.approx(sum(parts))
+    assert parts == pytest.approx((1e9 / 1e13, 1e6 / 1e11, 10 * 1e-7))
+
+
+# ---------------------------------------------------------------------------
+# calibrated ranking == closed form; preference chain
+# ---------------------------------------------------------------------------
+def _coeffs(backend="xla_ref"):
+    return BackendCoefficients(backend, 2e12, 3e10, 5e-7)
+
+
+def test_calibrated_cost_matches_closed_form():
+    co = _coeffs()
+    for c in enumerate_candidates("q8_matmul", 1504, 384, 1536,
+                                  vmem_budget_bytes=2**21)[:20]:
+        rep = calibrated_cost(c, 1504, 384, 1536, coeffs=co)
+        f, b, s = analytic_features(c, 1504, 384, 1536)
+        assert rep.source == "calibrated"
+        assert rep.cost_s == pytest.approx(co.predict(f, b, s), rel=1e-12)
+
+
+def test_preferred_cost_precedence():
+    """explicit calibration > process-global > analytic fallback."""
+    cand = enumerate_candidates("q8_matmul", 1504, 384, 1536,
+                                vmem_budget_bytes=2**21)[0]
+    cal = CalibratedCoefficients()
+    cal.put(_coeffs())
+    assert preferred_cost(cand, 1504, 384, 1536).source == "analytic"
+    assert preferred_cost(cand, 1504, 384, 1536,
+                          calibration=cal).source == "calibrated"
+    prev = set_calibration(cal)
+    try:
+        assert get_calibration() is cal
+        assert preferred_cost(cand, 1504, 384, 1536).source == "calibrated"
+        louder = CalibratedCoefficients()
+        louder.put(BackendCoefficients("xla_ref", 1e10, 1e9, 1e-6))
+        rep = preferred_cost(cand, 1504, 384, 1536, calibration=louder)
+        f, b, s = analytic_features(cand, 1504, 384, 1536)
+        assert rep.cost_s == pytest.approx(
+            louder.for_backend().predict(f, b, s))   # explicit arg wins
+    finally:
+        set_calibration(prev)
+
+
+def test_tuner_ranks_with_calibration():
+    cal = CalibratedCoefficients()
+    cal.put(_coeffs())
+    tun = Autotuner(vmem_budget_bytes=2**21, mode="analytic",
+                    calibration=cal)
+    rec = tun.search("q8_matmul", 1504, 384, 1536)
+    assert rec.source == "calibrated"
+    # the pick is argmin of the same closed form the test computes itself
+    co = cal.for_backend()
+    best = min(enumerate_candidates("q8_matmul", 1504, 384, 1536,
+                                    vmem_budget_bytes=2**21),
+               key=lambda c: co.predict(*analytic_features(c, 1504, 384,
+                                                           1536)))
+    assert (rec.block_m, rec.block_n, rec.block_k) == (
+        best.block_m, best.block_n, best.block_k)
+
+
+def test_tuner_autoloads_sibling_calibration(tmp_path):
+    cache_p = str(tmp_path / "tuning.json")
+    TuningCache().save(cache_p)
+    cal = CalibratedCoefficients()
+    cal.put(_coeffs())
+    cal.save(sibling_path(cache_p))
+    tun = Autotuner(vmem_budget_bytes=2**21, mode="analytic",
+                    cache_path=cache_p)
+    assert tun.calibration is not None
+    assert tun.search("q8_matmul", 1504, 384, 1536).source == "calibrated"
+
+
+def test_cache_merge_ranks_calibrated_between():
+    """merge preference: measured > calibrated > analytic."""
+    key = TuningKey("q8_matmul", 1504, 384, 1536, "q8_0", 2**21)
+    a = TuningCache()
+    a.put(key, TuningRecord(94, 384, 512, 1e-4, 2**20, "analytic"))
+    b = TuningCache()
+    b.put(key, TuningRecord(188, 128, 256, 9e-4, 2**19, "calibrated"))
+    a.merge(b)
+    assert a.entries[key].source == "calibrated"    # beats analytic
+    c = TuningCache()
+    c.put(key, TuningRecord(32, 128, 128, 5e-3, 2**18, "measured"))
+    a.merge(c)
+    assert a.entries[key].source == "measured"      # loses to measured
+
+
+# ---------------------------------------------------------------------------
+# rank correlation + trimmed mean
+# ---------------------------------------------------------------------------
+def test_rank_correlation_bounds():
+    assert rank_correlation([1, 2, 3, 4], [10, 20, 30, 40]) == 1.0
+    assert rank_correlation([1, 2, 3, 4], [40, 30, 20, 10]) == -1.0
+    assert rank_correlation([1.0], [2.0]) == 1.0            # degenerate
+    # ties get average ranks; a tie against a strict order stays in (0,1)
+    r = rank_correlation([1, 1, 2, 3], [1, 2, 3, 4])
+    assert 0.0 < r < 1.0
+
+
+def test_trimmed_mean_robust_to_outlier():
+    assert trimmed_mean([5.0, 1.0, 100.0]) == 5.0          # N=3 -> median
+    assert trimmed_mean([1.0, 2.0, 3.0, 4.0, 100.0]) == 3.0
+    assert trimmed_mean([7.0]) == 7.0
+    assert trimmed_mean([2.0, 4.0]) == 3.0                 # n<3: plain mean
+    with pytest.raises(ValueError):
+        trimmed_mean([])
+
+
+# ---------------------------------------------------------------------------
+# replay: determinism witness + registry-forcing semantics
+# ---------------------------------------------------------------------------
+def test_replay_deterministic(monkeypatch):
+    monkeypatch.delenv("REPRO_BACKEND", raising=False)
+    a = replay("q8_matvec", 8, 128, 64, "q8_0", backend="xla_ref",
+               reps=2, warmup=1)
+    b = replay("q8_matvec", 8, 128, 64, "q8_0", backend="xla_ref",
+               reps=2, warmup=1)
+    assert a.backend == b.backend == "xla_ref"
+    assert a.checksum == b.checksum          # bit-identical program+operands
+    assert math.isfinite(a.checksum)
+    assert len(a.times_s) == 2 and all(t > 0 for t in a.times_s)
+    assert (a.flops, a.bytes_hbm, a.steps) == (b.flops, b.bytes_hbm, b.steps)
+    assert a.flops > 0 and a.bytes_hbm > 0 and a.steps >= 1
+
+
+def test_replay_seed_changes_operands(monkeypatch):
+    monkeypatch.delenv("REPRO_BACKEND", raising=False)
+    a = replay("q8_matvec", 8, 128, 64, "q8_0", backend="xla_ref",
+               reps=1, warmup=1, seed=0)
+    b = replay("q8_matvec", 8, 128, 64, "q8_0", backend="xla_ref",
+               reps=1, warmup=1, seed=1)
+    assert a.checksum != b.checksum
+
+
+def test_replay_honors_backend_forcing(monkeypatch):
+    """REPRO_BACKEND outranks the replay pin, exactly as in production
+    dispatch (DESIGN.md §12.2) — a forced process measures what it runs."""
+    monkeypatch.setenv("REPRO_BACKEND", "xla_ref")
+    smp = replay("q8_matvec", 8, 128, 64, "q8_0", backend="host_residual",
+                 reps=1, warmup=1)
+    assert smp.backend == "xla_ref"
+
+
+def test_replay_records_pinned_tiling(monkeypatch):
+    monkeypatch.delenv("REPRO_BACKEND", raising=False)
+    smp = replay("q8_matvec", 8, 128, 64, "q8_0", backend="xla_ref",
+                 tiling=(8, 64, 64), reps=1, warmup=1)
+    assert smp.tiling == (8, 64, 64)
+
+
+# ---------------------------------------------------------------------------
+# the versioned JSON store
+# ---------------------------------------------------------------------------
+def _store():
+    cal = CalibratedCoefficients()
+    cal.put(BackendCoefficients("xla_ref", 2.123e12, 3.456e10, 5.7e-7,
+                                n_samples=10, median_rel_err=0.07))
+    cal.put(BackendCoefficients("pallas_tpu", 9e13, 8e11, 2e-7,
+                                n_samples=10, median_rel_err=0.11))
+    return cal
+
+
+def test_store_roundtrip_exact(tmp_path):
+    cal = _store()
+    p = str(tmp_path / "coeffs.json")
+    cal.save(p)
+    back = CalibratedCoefficients.load(p)
+    assert back.to_dict() == cal.to_dict()   # lossless, bit-for-bit floats
+    assert back.for_backend("xla_ref").eff_flops == 2.123e12
+    assert len(back) == 2
+
+
+def test_store_schema_guard(tmp_path):
+    p = tmp_path / "future.json"
+    p.write_text(json.dumps({"schema": SCHEMA_VERSION + 1,
+                             "backends": {}}))
+    with pytest.raises(ValueError, match="schema"):
+        CalibratedCoefficients.load(str(p))
+
+
+def test_corrupt_store_degrades_to_none(tmp_path):
+    """Calibration is an optimization: a corrupt file warns and yields
+    None (analytic fallback), never a construction failure."""
+    p = tmp_path / "corrupt.json"
+    p.write_text("garbage{{{")
+    with pytest.warns(UserWarning, match="unreadable calibration"):
+        assert CalibratedCoefficients.load_or_none(str(p)) is None
+    assert CalibratedCoefficients.load_or_none(
+        str(tmp_path / "absent.json")) is None
+    assert CalibratedCoefficients.load_or_none(None) is None
+
+
+def test_sibling_path_convention(tmp_path):
+    assert sibling_path("/a/b/tuning.json") == "/a/b/tuning.calibration.json"
+    # Autotuner(cache_path=p) looks exactly there (see autoload test above)
+
+
+def test_fit_from_replay_samples_is_storable(monkeypatch, tmp_path):
+    """End to end at test scale: replay -> fit -> store -> reload ->
+    tuner consumes it."""
+    monkeypatch.delenv("REPRO_BACKEND", raising=False)
+    samples = [replay("q8_matvec", 8, n, 64, "q8_0", backend="xla_ref",
+                      reps=2, warmup=1)
+               for n in (128, 256, 512)]
+    co = fit_backend(samples, "xla_ref")
+    assert co.eff_flops > 0 and co.eff_bw > 0 and co.overhead_s >= 0
+    cal = CalibratedCoefficients()
+    cal.put(co)
+    p = str(tmp_path / "coeffs.json")
+    cal.save(p)
+    tun = Autotuner(vmem_budget_bytes=2**21, mode="analytic",
+                    calibration=CalibratedCoefficients.load(p))
+    rec = tun.search("q8_matvec", 8, 1536, 384)
+    assert rec is not None and rec.source == "calibrated"
+
+
+def test_replay_sample_time_is_trimmed_mean():
+    s = ReplaySample("q8_matvec", 8, 128, 64, "q8_0", "xla_ref", None,
+                     (5.0, 1.0, 100.0), 1, 0.0, 1e6, 1e5, 2.0)
+    assert s.time_s == 5.0
