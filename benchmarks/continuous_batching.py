@@ -166,7 +166,11 @@ def _run_continuous(engine: ServeEngine, mels: List[np.ndarray],
     return {"tok_s": tokens / max(t, 1e-9), "p50_s": _percentile(lat, 50),
             "p95_s": _percentile(lat, 95), "makespan_s": t,
             "tokens": tokens, "pdp_j": energy.pdp(t, energy.TPU_V5E_W),
-            "attributed_pdp_j": per_req_sum}
+            "attributed_pdp_j": per_req_sum,
+            # KV memory accounting (DESIGN.md §15.4): bytes the pool
+            # commits up front, and peak fraction holding live data
+            "kv_committed_bytes": sched.kv_committed_bytes,
+            "kv_utilization": sched.kv_utilization_peak}
 
 
 def _variant(name: str, cfg, params, quant: str, offload, smoke: bool,
@@ -220,11 +224,15 @@ def run(smoke: bool = False) -> dict:
             r = v[mode]
             rows.append([v["name"], mode, f"{r['tok_s']:.1f}",
                          f"{r['p50_s']*1e3:.1f}", f"{r['p95_s']*1e3:.1f}",
-                         f"{r['pdp_j']:.1f}"])
+                         f"{r['pdp_j']:.1f}",
+                         (f"{r['kv_committed_bytes']/1024:.0f}"
+                          if "kv_committed_bytes" in r else "-"),
+                         (f"{r['kv_utilization']:.2f}"
+                          if "kv_utilization" in r else "-")])
     print("whisper-tiny serving under staggered Poisson arrivals "
           f"({'smoke' if smoke else 'full'} config)")
     print(fmt_table(rows, ["variant", "mode", "tok/s", "p50(ms)", "p95(ms)",
-                           "PDP(J)"]))
+                           "PDP(J)", "KV committed(KiB)", "KV util"]))
     ok = True
     for v in variants:
         win = (v["speedup_tok_s"] >= 1.0

@@ -50,6 +50,8 @@ BENCHMARK_INDEX = [
      "continuous vs static batching under Poisson arrivals"),
     ("sharded_serving", "§5.1 E2E / DESIGN.md §13",
      "mesh-sharded vs single-device serve (token parity + by_device)"),
+    ("paged_serving", "§5.1 E2E / DESIGN.md §15",
+     "paged vs contiguous KV serving (parity + requests-per-GB)"),
 ]
 
 

@@ -13,8 +13,8 @@ import traceback
 from benchmarks import (
     backend_matrix, burst_sweep, calibration_error, continuous_batching,
     coverage_cdf, decode_throughput, exec_breakdown, lmm_latency, lmm_power,
-    multi_utterance, pdp_cross_platform, profile_shares, q8_reconstruction,
-    sharded_serving, tune_sweep)
+    multi_utterance, paged_serving, pdp_cross_platform, profile_shares,
+    q8_reconstruction, sharded_serving, tune_sweep)
 
 SUITES = [
     ("q8_reconstruction (§4.2)", q8_reconstruction.run, False),
@@ -35,6 +35,7 @@ SUITES = [
     ("continuous_batching (§5.1 / DESIGN.md §11)", continuous_batching.run,
      True),
     ("sharded_serving (§5.1 / DESIGN.md §13)", sharded_serving.run, True),
+    ("paged_serving (§5.1 / DESIGN.md §15)", paged_serving.run, True),
 ]
 
 

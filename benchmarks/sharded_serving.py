@@ -90,7 +90,10 @@ def _serve_trace(engine, mels: List, max_news: List[int], n_slots: int,
     steps = sum(got[r].steps for r in rids)
     return {"tokens": tokens, "wall_s": wall, "steps": steps,
             "tok_s": steps / max(wall, 1e-9),
-            "step_traces": sched.step_traces}
+            "step_traces": sched.step_traces,
+            # KV memory accounting (DESIGN.md §15.4)
+            "kv_committed_bytes": sched.kv_committed_bytes,
+            "kv_utilization": sched.kv_utilization_peak}
 
 
 def _variant(name: str, cfg, params, quant: str, make_offload, mesh,
@@ -174,11 +177,14 @@ def run(smoke: bool = False) -> dict:
         for mode in ("single", "sharded"):
             r = v[mode]
             rows.append([v["name"], mode, f"{r['tok_s']:.1f}",
-                         str(r["steps"]), str(r["step_traces"])])
+                         str(r["steps"]), str(r["step_traces"]),
+                         f"{r['kv_committed_bytes']/1024:.0f}",
+                         f"{r['kv_utilization']:.2f}"])
     n_dev = len(jax.devices())
     print(f"whisper-tiny sharded serving on a {n_dev}-device host mesh "
           f"({'smoke' if smoke else 'full'} config)")
-    print(fmt_table(rows, ["variant", "mode", "tok/s", "steps", "traces"]))
+    print(fmt_table(rows, ["variant", "mode", "tok/s", "steps", "traces",
+                           "KV committed(KiB)", "KV util"]))
     ok = True
     for v in variants:
         ok = ok and v["ok"]

@@ -178,7 +178,9 @@ class DispatchPlan:
 
 
 def plan_key(phase: str, quant: Optional[str], batch: int,
-             *extra: Hashable, mesh=None) -> Tuple[Hashable, ...]:
+             *extra: Hashable, mesh=None,
+             pages: Optional[Tuple[Hashable, ...]] = None
+             ) -> Tuple[Hashable, ...]:
     """Canonical plan-cache key: ``(phase, quant, batch, *extra)``.
 
     One key family serves both serving modes (DESIGN.md §11.3): a
@@ -194,10 +196,20 @@ def plan_key(phase: str, quant: Optional[str], batch: int,
     (DESIGN.md §13): the sharded decode step at ``(B, F)`` is a
     *different* compiled program from its unsharded twin — different
     layouts, different collectives — so they must never share a cache
-    entry. ``mesh=None`` leaves pre-mesh keys byte-identical."""
+    entry. ``mesh=None`` leaves pre-mesh keys byte-identical.
+
+    ``pages`` appends the paged-pool geometry (DESIGN.md §15): a paged
+    decode step gathers its KV through block tables — a different traced
+    program from the contiguous step at the same (batch, frames) — so
+    paged and contiguous programs must never share a ``PlanCache`` entry.
+    ``pages=None`` leaves contiguous keys byte-identical."""
     base = (phase, quant, batch, *extra)
     sig = mesh_signature(mesh) if hasattr(mesh, "axis_names") else mesh
-    return base if sig is None else (*base, ("mesh", sig))
+    if sig is not None:
+        base = (*base, ("mesh", sig))
+    if pages is not None:
+        base = (*base, ("pages", tuple(pages)))
+    return base
 
 
 @dataclass

@@ -293,6 +293,19 @@ class KVCache(NamedTuple):
                    jnp.zeros((), jnp.int32))
 
 
+class PagedKVCache(NamedTuple):
+    """Paged decode cache (DESIGN.md §15.2): K/V live in a fixed-shape
+    page arena shared by every slot; each row reaches its pages through a
+    per-slot ``block_table`` gather. Physical page 0 is the trash page —
+    free slots' table rows all point at it, so the fixed-shape batch can
+    keep writing garbage rows without owning memory. ``length`` is always
+    per-row ``(B,)`` (the pool layout is the only consumer)."""
+    k_pages: jax.Array       # (P, page, Hkv, D) physical page arena
+    v_pages: jax.Array       # (P, page, Hkv, D)
+    block_table: jax.Array   # (B, max_pages) int32 — logical -> physical
+    length: jax.Array        # (B,) int32 — tokens currently valid
+
+
 class QKVCache(NamedTuple):
     """Int8-quantized KV cache — the paper's Q8_0 block idea applied to the
     *decode-dominant* bytes (beyond-paper, EXPERIMENTS.md §Perf C). One
@@ -369,7 +382,31 @@ def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array,
                    else cache.length[None, None])
             q = layers.apply_rope(q, pos, cfg.rope_theta)
             knew = layers.apply_rope(knew, pos, cfg.rope_theta)
-        if isinstance(cache, QKVCache):
+        if isinstance(cache, PagedKVCache):
+            # paged write (DESIGN.md §15.2): each row scatters its new
+            # entry into (physical page of its current logical page,
+            # in-page offset). Free slots' table rows point at trash page
+            # 0, so garbage rows never touch owned memory; active rows
+            # write CoW-private pages, so scatter indices never collide.
+            ps = cache.k_pages.shape[1]
+            n_log = cache.block_table.shape[1]
+            lp = jnp.minimum(cache.length // ps, n_log - 1)
+            off = cache.length % ps
+            phys = jnp.take_along_axis(cache.block_table, lp[:, None],
+                                       axis=1)[:, 0]
+            k_pages = cache.k_pages.at[phys, off].set(
+                knew[:, 0].astype(cache.k_pages.dtype))
+            v_pages = cache.v_pages.at[phys, off].set(
+                vnew[:, 0].astype(cache.v_pages.dtype))
+            new_cache = PagedKVCache(k_pages, v_pages, cache.block_table,
+                                     cache.length + 1)
+            # paged read: gather each row's pages into its contiguous
+            # (n_log*page,) view — token t sits at gathered position t, so
+            # the per-row valid mask below is identical to the contiguous
+            # layout and the attention math is unchanged (token-exact).
+            k = k_pages[cache.block_table].reshape(b, n_log * ps, hkv, hd)
+            v = v_pages[cache.block_table].reshape(b, n_log * ps, hkv, hd)
+        elif isinstance(cache, QKVCache):
             # int8 cache path: quantize the new entry, stream int8 +
             # scales, dequantize inline before the MACs (paper-style)
             kq, ks = quantize_kv(knew)

@@ -254,6 +254,15 @@ def slot_state_specs(state: ServeState, mesh) -> ServeState:
         step=spec(state.step, slot_batch_axis(True)))
 
 
+def state_kv_bytes(state: Any) -> int:
+    """Committed bytes of a decode-state pytree (KV buffers + counters +
+    block tables). The serving benchmarks report this next to tok/s so
+    the paged pool's memory win (DESIGN.md §15.4) is measured by the same
+    harness that gates token parity."""
+    return sum(int(l.size) * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(state))
+
+
 def init_serve_state(params: dict, cfg: ModelConfig, batch: int, max_len: int,
                      *, memory: Optional[jax.Array] = None, engine=None,
                      prefill_len: int = 0) -> ServeState:

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import layers
 from repro.models.attention import (
-    KVCache, attention, decode_attention, init_attention)
+    KVCache, PagedKVCache, attention, decode_attention, init_attention)
 from repro.models.transformer import _remat
 from repro.sharding import ctx
 
@@ -29,6 +29,23 @@ from repro.sharding import ctx
 class WhisperDecodeState(NamedTuple):
     self_kv: List[KVCache]          # stacked (R, ...) decoder self-attn cache
     cross_kv: Tuple[jax.Array, jax.Array]  # (R, B, F, Hkv, hd) x2, fixed
+
+
+class WhisperPagedDecodeState(NamedTuple):
+    """Paged slot-pool decode state (DESIGN.md §15.2): self-attn KV and
+    the per-utterance cross-KV both live in fixed-shape page arenas, with
+    one block table per slot shared by every layer (a page is ``page``
+    positions x all ``R`` layers). Physical page 0 of each arena is the
+    trash page free slots write/read through. ``length`` carries the
+    per-layer (R, B) decode positions exactly like the contiguous slot
+    layout, so ``decode_step`` position handling is unchanged."""
+    self_k: jax.Array        # (R, P, page, Hkv, hd) self-KV page arena
+    self_v: jax.Array        # (R, P, page, Hkv, hd)
+    cross_k: jax.Array       # (R, Pc, cpage, Hkv, hd) cross-KV page arena
+    cross_v: jax.Array       # (R, Pc, cpage, Hkv, hd)
+    block_table: jax.Array   # (B, max_pages) i32 — self logical -> physical
+    cross_table: jax.Array   # (B, n_cross_pages) i32 — frames -> physical
+    length: jax.Array        # (R, B) i32 — tokens valid per layer/slot
 
 
 def warm_tuning(cfg: ModelConfig, engine, *, n_frames: int = 1500,
@@ -208,6 +225,60 @@ def init_whisper_decode_state(params: dict, cfg: ModelConfig, memory: jax.Array,
         cross_kv=precompute_cross_kv(params, cfg, memory, engine=engine))
 
 
+def _decode_step_paged(params: dict, cfg: ModelConfig, token: jax.Array,
+                       state: WhisperPagedDecodeState, *, engine=None
+                       ) -> Tuple[jax.Array, WhisperPagedDecodeState]:
+    """Paged twin of ``decode_step`` (DESIGN.md §15.2): self-KV
+    reads/writes go through the per-slot block table (see
+    ``attention.PagedKVCache``) and each layer's cross-KV is gathered from
+    its pages back into the contiguous (B, F, Hkv, hd) view — F is an
+    exact multiple of the cross page size (pool invariant), so position t
+    of the gathered view IS position t of the contiguous one and the
+    attention math (hence every token) is unchanged."""
+    x = layers.embed(params["embed"], token)
+    pos = state.length[0]                       # (B,) per-slot positions
+    table = params["dec_pos"]["table"]
+    x = x + jnp.take(table, pos, axis=0)[:, None].astype(x.dtype)
+    b = token.shape[0]
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    bt, ct = state.block_table, state.cross_table
+
+    def body(x, xs):
+        p, sk, sv, length, ckp, cvp = xs
+        cache = PagedKVCache(sk, sv, bt, length)
+        h = layers.norm_apply(p["norm1"], x, cfg.norm)
+        mixed, cache = decode_attention(p["self_attn"], cfg, h, cache,
+                                        engine=engine)
+        x = x + mixed.astype(x.dtype)
+        ck = ckp[ct].reshape(b, -1, hkv, hd)
+        cv = cvp[ct].reshape(b, -1, hkv, hd)
+        h = layers.norm_apply(p["norm_x"], x, cfg.norm)
+        mixed, _ = decode_attention(p["cross_attn"], cfg, h, cache,
+                                    memory_kv=(ck, cv), engine=engine)
+        x = x + mixed.astype(x.dtype)
+        h = layers.norm_apply(p["norm2"], x, cfg.norm)
+        x = x + layers.mlp_apply(p["ffn"], h, cfg.act, engine=engine
+                                 ).astype(x.dtype)
+        return x, (cache.k_pages, cache.v_pages, cache.length)
+
+    xs = (params["dec_blocks"], state.self_k, state.self_v, state.length,
+          state.cross_k, state.cross_v)
+    if cfg.scan_layers:
+        x, (nk, nv, nl) = jax.lax.scan(body, x, xs)
+    else:
+        outs = []
+        for i in range(cfg.num_layers):
+            xi = jax.tree_util.tree_map(lambda a: a[i], xs)
+            x, o = body(x, xi)
+            outs.append(o)
+        nk, nv, nl = (jnp.stack([o[j] for o in outs]) for j in range(3))
+    x = layers.norm_apply(params["dec_norm"], x, cfg.norm)
+    logits = layers.unembed(params["embed"], x, engine)
+    return logits, WhisperPagedDecodeState(
+        self_k=nk, self_v=nv, cross_k=state.cross_k, cross_v=state.cross_v,
+        block_table=bt, cross_table=ct, length=nl)
+
+
 def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                 state: WhisperDecodeState, *, engine=None
                 ) -> Tuple[jax.Array, WhisperDecodeState]:
@@ -215,7 +286,11 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
 
     Positions come from the layer-0 self-KV length: scalar for a lockstep
     batch, per-row ``(B,)`` in the slot-pool layout (DESIGN.md §11.1) —
-    each slot then reads its own learned positional embedding row."""
+    each slot then reads its own learned positional embedding row.
+    ``WhisperPagedDecodeState`` dispatches to the paged twin
+    (DESIGN.md §15.2)."""
+    if isinstance(state, WhisperPagedDecodeState):
+        return _decode_step_paged(params, cfg, token, state, engine=engine)
     x = layers.embed(params["embed"], token)
     pos = (state.self_kv.length[0] if state.self_kv.length.ndim
            else state.self_kv.length)

@@ -214,14 +214,16 @@ class ServeEngine:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
     # ------------------------------------------------------------------
-    def _key(self, phase: str, batch: int, *extra: Hashable) -> Hashable:
+    def _key(self, phase: str, batch: int, *extra: Hashable,
+             pages: Optional[Any] = None) -> Hashable:
         """This engine's canonical plan key: ``(phase, quant, batch,
         *extra)`` plus the mesh signature when serving sharded
-        (DESIGN.md §13) — the one-shot paths and the scheduler both build
-        keys here, so sharded and unsharded programs at the same shapes
-        land in distinct ``PlanCache`` entries."""
+        (DESIGN.md §13) and the page geometry when serving paged
+        (DESIGN.md §15.5) — the one-shot paths and both schedulers build
+        keys here, so sharded/paged programs at the same shapes land in
+        distinct ``PlanCache`` entries."""
         return plan_key(phase, self._serve_quant, batch, *extra,
-                        mesh=self.mesh)
+                        mesh=self.mesh, pages=pages)
 
     def _plan(self, key: Hashable, fn, *args) -> Optional[DispatchPlan]:
         """Routing plan for ``fn(*args)``, cached per shape key
@@ -367,6 +369,20 @@ class ServeEngine:
             self._scheduler = ContinuousBatchingScheduler(
                 self, n_slots=want_slots, n_frames=want_frames)
         return self._scheduler
+
+    def paged_scheduler(self, n_slots: int = 4,
+                        n_frames: Optional[int] = None, **page_cfg):
+        """A paged-pool continuous-batching scheduler over this engine
+        (serve/paging.py, DESIGN.md §15): fixed page arenas instead of
+        per-slot preallocation, whole-utterance prefix sharing, and
+        admission control that oversubscribes logical slots against
+        physical pages with preempt-and-recompute. Built fresh per call —
+        page geometry (``page_size``, ``n_pages``, ``cross_page_size``,
+        ``n_cross_pages``) is workload-tuned and the caller owns the
+        instance; the cached ``scheduler()`` stays the contiguous path."""
+        from repro.serve.paging import PagedScheduler
+        return PagedScheduler(self, n_slots=n_slots, n_frames=n_frames,
+                              **page_cfg)
 
     def submit(self, prompt: np.ndarray, max_new: int = 32, *,
                n_slots: Optional[int] = None) -> int:

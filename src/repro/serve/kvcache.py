@@ -35,7 +35,8 @@ the least-loaded device so active slots spread across the mesh.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+import bisect
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -127,7 +128,6 @@ class SlotKVPool:
         else:
             st = model_lib.init_serve_state(params, cfg, n_slots, max_len)
         self.state: ServeState = model_lib.slot_layout(st, n_slots)
-        self._free: List[int] = list(range(n_slots))
         self.mesh = mesh
         self.n_shards = 1
         self._insert_jit = _INSERT_JIT
@@ -146,11 +146,23 @@ class SlotKVPool:
             if dsize > 1 and n_slots % dsize == 0:
                 self.n_shards = dsize
         self.shard_size = n_slots // self.n_shards
+        self._init_free()
 
     # -- free-slot bookkeeping (host side) -----------------------------
+    def _init_free(self) -> None:
+        """Per-shard sorted free lists — occupancy is maintained
+        incrementally, so ``acquire`` is O(n_shards) instead of the old
+        per-call scan over every free slot (ISSUE 7: the oversubscribing
+        paged scheduler multiplies admission passes, so admission cost
+        must not grow with pool width)."""
+        self._free_by_shard: List[List[int]] = [
+            list(range(s * self.shard_size, (s + 1) * self.shard_size))
+            for s in range(self.n_shards)]
+        self._n_free = self.n_slots
+
     @property
     def n_free(self) -> int:
-        return len(self._free)
+        return self._n_free
 
     def slot_shard(self, slot: int) -> int:
         """Device-shard index owning ``slot`` (0 when unsharded)."""
@@ -161,20 +173,16 @@ class SlotKVPool:
         lowest index; sharded pools admit into the device-local slot range
         with the fewest active occupants (ties -> lowest index), so load
         spreads across the mesh instead of piling onto shard 0
-        (DESIGN.md §13)."""
-        if self.n_shards == 1:
-            return self._free.pop(0)
-        free_per_shard = [0] * self.n_shards
-        for s in self._free:
-            free_per_shard[self.slot_shard(s)] += 1
-
-        def load(s: int):
-            # fewest active == most free; prefer lower slot index on ties
-            return (-free_per_shard[self.slot_shard(s)], s)
-
-        pick = min(self._free, key=load)
-        self._free.remove(pick)
-        return pick
+        (DESIGN.md §13). O(n_shards): the per-shard free lists carry the
+        occupancy counters, so nothing is scanned per call."""
+        if self._n_free == 0:
+            raise IndexError("pool full: no free slot")
+        # fewest active == most free; prefer the lower shard on ties —
+        # identical pick order to the old full-scan implementation
+        shard = max(range(self.n_shards),
+                    key=lambda s: (len(self._free_by_shard[s]), -s))
+        self._n_free -= 1
+        return self._free_by_shard[shard].pop(0)
 
     def release(self, slot: int, reset: bool = True) -> None:
         """Return ``slot`` to the free list. ``reset=False`` skips zeroing
@@ -183,8 +191,34 @@ class SlotKVPool:
         path uses it; a reset is a full pool-state copy per eviction)."""
         if reset:
             self.state = self._reset_jit(self.state, slot)
-        self._free.append(slot)
-        self._free.sort()
+        bisect.insort(self._free_by_shard[self.slot_shard(slot)], slot)
+        self._n_free += 1
+
+    # -- memory accounting (DESIGN.md §15.4) ----------------------------
+    def committed_kv_bytes(self) -> int:
+        """Bytes preallocated for the whole pool state — what this
+        contiguous layout commits regardless of occupancy."""
+        return model_lib.state_kv_bytes(self.state)
+
+    def used_kv_bytes(self, lengths: Dict[int, int]) -> int:
+        """Bytes of committed state holding live request data, given the
+        active slots' decode lengths: positional KV rows count
+        proportionally to their filled length, fixed-size rows (whisper
+        cross-KV) count whole per active slot. ``kv_utilization`` in the
+        serving benchmarks is used/committed."""
+        if not lengths:
+            return 0
+        n_active = len(lengths)
+        frac = sum(min(l, self.max_len)
+                   for l in lengths.values()) / self.max_len
+        total = 0.0
+        for leaf in jax.tree_util.tree_leaves(self.state.layer_states):
+            per_slot = leaf.size // leaf.shape[1] * leaf.dtype.itemsize
+            if leaf.ndim >= 3 and leaf.shape[2] == self.max_len:
+                total += per_slot * frac
+            else:
+                total += per_slot * n_active
+        return int(total)
 
     # -- state ops ------------------------------------------------------
     def insert(self, slot: int, req_state: ServeState) -> None:

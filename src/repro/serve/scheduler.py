@@ -102,9 +102,7 @@ class ContinuousBatchingScheduler:
             raise ValueError("audio scheduler needs n_frames (the pool's "
                              "fixed mel-frame capacity)")
         self.n_frames = n_frames
-        self.pool = SlotKVPool(cfg, engine._serve_params, n_slots,
-                               engine.max_len, n_frames=n_frames,
-                               mesh=engine.mesh)
+        self.pool = self._make_pool()
         self.queue: Deque[_QueuedRequest] = deque()
         self.finished: Dict[int, GenerationResult] = {}
         self._active: Dict[int, _ActiveSlot] = {}      # slot -> request
@@ -131,6 +129,41 @@ class ContinuousBatchingScheduler:
         # run(), so attribution stays exact across claim cycles.
         self._busy_s = 0.0
         self._claimed_s = 0.0
+        # KV memory accounting (DESIGN.md §15.4): peak bytes of committed
+        # state holding live request data, and peak concurrent admissions —
+        # the serving benchmarks report kv_utilization = used_peak/committed
+        self.kv_used_peak = 0
+        self.active_peak = 0
+
+    def _make_pool(self):
+        """Pool factory — the paged scheduler (serve/paging.py,
+        DESIGN.md §15) overrides this to swap in its ``PagedKVPool`` while
+        inheriting the whole admit/decode/evict loop."""
+        eng = self.engine
+        return SlotKVPool(eng.cfg, eng._serve_params, self.n_slots,
+                          eng.max_len, n_frames=self.n_frames,
+                          mesh=eng.mesh)
+
+    # -- KV accounting (DESIGN.md §15.4) --------------------------------
+    @property
+    def kv_committed_bytes(self) -> int:
+        return self.pool.committed_kv_bytes()
+
+    @property
+    def kv_utilization_peak(self) -> float:
+        c = self.kv_committed_bytes
+        return self.kv_used_peak / c if c else 0.0
+
+    def _note_kv_usage(self) -> None:
+        """Sample KV usage at this step's height: every active slot is
+        about to write (or just wrote) position ``steps``, so it holds
+        ``steps + 1`` live entries."""
+        lengths = {s: a.steps + 1 for s, a in self._active.items()}
+        used = self.pool.used_kv_bytes(lengths)
+        if used > self.kv_used_peak:
+            self.kv_used_peak = used
+        if len(self._active) > self.active_peak:
+            self.active_peak = len(self._active)
 
     # -- queue ----------------------------------------------------------
     @property
@@ -238,6 +271,7 @@ class ContinuousBatchingScheduler:
         if not self._active:
             return []
         self._ensure_step_plan()
+        self._note_kv_usage()
         eng = self.engine
         t0 = time.perf_counter()
         nxt, _, state = eng._step_jit(eng._serve_params, self._tokens,

@@ -301,6 +301,37 @@ def serve_param_specs(params, mesh: Mesh):
         is_leaf=lambda x: isinstance(x, P))
 
 
+def paged_state_specs(state, mesh: Mesh):
+    """Specs for a paged serve state (DESIGN.md §15.3): the page arenas
+    shard their *page* axis over the slot-DP "data" axis (pages are the
+    unit of KV memory, so the arena — not the slot axis — is what must
+    scale with the mesh), while the per-slot block tables and counters
+    shard the slot axis exactly like ``model.slot_state_specs``. The rule
+    is structural by leaf name, divisibility-checked per leaf so one call
+    site stays valid on any mesh (the rules.py contract)."""
+    dsize = _axis_size(mesh, "data")
+
+    def leaf(path, x):
+        name = _path_str(path).rsplit("/", 1)[-1]
+        if dsize <= 1:
+            return P()
+        if name in ("self_k", "self_v", "cross_k", "cross_v"):
+            # (R, P, page, Hkv, hd): shard the physical-page axis
+            return P(None, "data") if x.shape[1] % dsize == 0 else P()
+        if name in ("block_table", "cross_table"):
+            # (n_slots, max_pages): shard slots
+            return P("data") if x.shape[0] % dsize == 0 else P()
+        if name == "length":
+            # (R, n_slots)
+            return P(None, "data") if x.shape[1] % dsize == 0 else P()
+        if name == "step":
+            # (n_slots,)
+            return P("data") if x.shape[0] % dsize == 0 else P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf, state)
+
+
 def mesh_signature(mesh) -> Optional[Tuple[Tuple[str, int], ...]]:
     """Hashable identity of a mesh's (axis, size) layout — the sharding
     component of plan keys and ``PlanEntry.mesh`` (DESIGN.md §13): a

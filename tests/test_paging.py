@@ -1,0 +1,277 @@
+"""Paged KV-cache pool + scheduler (DESIGN.md §15): the paged scheduler
+emits token streams identical to one-at-a-time decode through prefix
+sharing, oversubscription, and preempt-and-recompute; plan keys carry the
+page geometry so paged and contiguous programs never collide; eviction
+returns pages before the next admit pass (EOS-reuse regression); and the
+fixed-shape arenas keep the engine's decode step at zero retraces."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.core.offload import OffloadEngine
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+from repro.serve.paging import PagedKVPool
+
+N_FRAMES = 8
+
+
+@pytest.fixture(scope="module")
+def whisper_setup():
+    cfg = get_smoke_config("whisper-tiny")
+    params = M.init_params(jax.random.PRNGKey(0), cfg, 64)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def ref_engine(whisper_setup):
+    """Reference engine for one-at-a-time token streams — kept separate
+    from the engines under test so their step-trace counters stay
+    untouched by ref transcribes."""
+    cfg, params = whisper_setup
+    return ServeEngine(cfg, params, max_len=32, quant="none", eos_id=-1)
+
+
+def _mels(cfg, n, rng=None):
+    rng = rng or np.random.default_rng(0)
+    return [rng.standard_normal((1, N_FRAMES, cfg.n_mels)).astype(np.float32)
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Pool construction contracts
+# ---------------------------------------------------------------------------
+def test_pool_rejects_bad_geometry(whisper_setup):
+    cfg, params = whisper_setup
+    with pytest.raises(ValueError, match="power of two"):
+        PagedKVPool(cfg, params, 2, 16, n_frames=N_FRAMES, page_size=3)
+    with pytest.raises(ValueError, match="divide n_frames"):
+        PagedKVPool(cfg, params, 2, 16, n_frames=N_FRAMES,
+                    cross_page_size=3)
+    with pytest.raises(ValueError, match="n_frames"):
+        PagedKVPool(cfg, params, 2, 16)                # audio needs frames
+
+
+def test_pool_rejects_lm_families(whisper_setup):
+    cfg = get_smoke_config("qwen2.5-14b")
+    with pytest.raises(NotImplementedError):
+        PagedKVPool(cfg, None, 2, 16, n_frames=N_FRAMES)
+
+
+def test_pool_defaults_cover_full_occupancy(whisper_setup):
+    """Default geometry = no oversubscription: every slot can hold
+    max_len self pages and a private cross block, plus the trash page."""
+    cfg, params = whisper_setup
+    pool = PagedKVPool(cfg, params, 3, 16, n_frames=N_FRAMES, page_size=4)
+    assert pool.max_pages == 4
+    assert pool.n_pages == 1 + 3 * 4
+    assert pool.n_cross_per_req == 1                   # one page per utterance
+    assert pool.n_cross_pages == 1 + 3
+    assert pool.plan_geometry == (4, 13, N_FRAMES, 4)
+    # used bytes counts real allocations, not slot capacity
+    assert pool.used_kv_bytes() == 0
+    pool.alloc_self_page(pool.acquire())
+    assert pool.used_kv_bytes() == pool.page_bytes
+
+
+# ---------------------------------------------------------------------------
+# Parity: paged scheduler vs one-at-a-time decode
+# ---------------------------------------------------------------------------
+def test_paged_matches_one_at_a_time_with_sharing(whisper_setup, ref_engine):
+    """The §15 contract: paged continuous decode (with duplicate
+    utterances landing on shared cross pages) emits, per request, exactly
+    the token stream a batch-1 transcribe produces — at one step trace."""
+    cfg, params = whisper_setup
+    m = _mels(cfg, 3)
+    # staggered budgets keep each duplicate resident WITH its partner
+    # (sharing is by live refcount — a retired digest is a miss again)
+    trace = [(m[0], 6), (m[1], 6), (m[0], 3), (m[1], 3), (m[2], 3)]
+    refs = [ref_engine.transcribe(mel, max_new=mn)[0].tokens
+            for mel, mn in trace]
+    eng = ServeEngine(cfg, params, max_len=32, quant="none", eos_id=-1)
+    sched = eng.paged_scheduler(n_slots=3, n_frames=N_FRAMES, page_size=4)
+    rids = [sched.submit(mel, max_new=mn) for mel, mn in trace]
+    res = sched.run()
+    for rid, ref in zip(rids, refs):
+        assert res[rid].tokens == ref
+    assert sched.shared_hits == 2
+    assert sched.preemptions == 0                      # default geometry
+    assert sched.step_traces == 1                      # zero retraces
+    # finished requests dropped their replay payloads
+    assert not sched._payloads
+
+
+def test_preemption_replays_token_exactly(whisper_setup, ref_engine):
+    """Oversubscription contract (§15.5): a self arena too small for the
+    concurrent budgets forces preempt-and-recompute, and every stream is
+    STILL token-exact — greedy replay is deterministic. PDP attribution
+    survives: per-request energies sum to the batch total."""
+    cfg, params = whisper_setup
+    mels = _mels(cfg, 3)
+    off = OffloadEngine(prefer_pallas=False)
+    eng = ServeEngine(cfg, params, max_len=32, quant="q8_0", offload=off,
+                      eos_id=-1)
+    # refs on the SAME quant (q8_0 shifts numerics vs the dense ref
+    # engine); this traces the batch-1 step once, counted below
+    refs = [eng.transcribe(m, max_new=6)[0].tokens for m in mels]
+    traces0 = eng._step_traces
+    # 4 allocatable self pages for 3 slots x ceil(7/4)=2 pages -> starved
+    sched = eng.paged_scheduler(n_slots=3, n_frames=N_FRAMES, page_size=4,
+                                n_pages=5)
+    rids = [sched.submit(m, max_new=6) for m in mels]
+    res = sched.run()
+    for rid, ref in zip(rids, refs):
+        assert res[rid].tokens == ref
+        assert res[rid].steps == 6
+    assert sched.preemptions > 0
+    # one new trace (the paged pool-width step); replay uses decode_jit
+    assert eng._step_traces == traces0 + 1
+    att = sched.attribution()
+    assert sum(att["per_request_pdp_j"].values()) == \
+        pytest.approx(att["batch_pdp_j"], rel=1e-9)
+
+
+def test_shared_hit_skips_prefill_and_its_ledger_commit(whisper_setup):
+    """A prefix-share admission runs no encoder: one prefill ledger
+    commit for two identical utterances, and no plan work attributed to
+    the hit (the PDP invariant would break otherwise)."""
+    cfg, params = whisper_setup
+    off = OffloadEngine(prefer_pallas=False)
+    eng = ServeEngine(cfg, params, max_len=16, quant="q8_0", offload=off,
+                      eos_id=-1)
+    mel = _mels(cfg, 1)[0]
+    sched = eng.paged_scheduler(n_slots=2, n_frames=N_FRAMES, page_size=4)
+    r0 = sched.submit(mel, max_new=3)
+    r1 = sched.submit(mel.copy(), max_new=3)           # same bytes, new array
+    n_steps = 0
+    while sched.n_queued or sched.n_active:
+        sched.admit()
+        if sched.decode_step():
+            n_steps += 1
+    assert sched.shared_hits == 1
+    # 1 prefill commit (not 2) + one commit per executed batch step
+    assert off.ledger.commits == 1 + n_steps
+    assert sched.finished[r0].tokens == sched.finished[r1].tokens
+    # last release retired the shared digest with its pages
+    assert not sched.pool._shared
+
+
+def test_plan_keys_carry_page_geometry(whisper_setup):
+    """§15.5: the paged step's plan key embeds the page geometry, so
+    paged and contiguous programs at the SAME (batch, frames) point hold
+    disjoint PlanCache entries — no cross-mode plan reuse."""
+    cfg, params = whisper_setup
+    eng = ServeEngine(cfg, params, max_len=16, quant="q8_0",
+                      offload=OffloadEngine(prefer_pallas=False), eos_id=-1)
+    k_contig = eng._key("step", 2, N_FRAMES)
+    k_paged = eng._key("step", 2, N_FRAMES, pages=(4, 9, N_FRAMES, 3))
+    assert k_contig != k_paged
+    k_other = eng._key("step", 2, N_FRAMES, pages=(8, 9, N_FRAMES, 3))
+    assert k_paged != k_other                          # geometry-sensitive
+    mel = _mels(cfg, 1)[0]
+    sched_c = eng.scheduler(n_slots=2, n_frames=N_FRAMES)
+    sched_c.submit(mel, max_new=2)
+    sched_c.run()
+    n_plans = len(eng._plans)
+    sched_p = eng.paged_scheduler(n_slots=2, n_frames=N_FRAMES, page_size=4)
+    sched_p.submit(mel, max_new=2)
+    sched_p.run()
+    # the paged step recorded its own plan; batch-1 prefill was shared
+    assert len(eng._plans) == n_plans + 1
+
+
+# ---------------------------------------------------------------------------
+# EOS-reuse regression (ISSUE 7 satellite): freed pages admit the queue
+# head in the SAME scheduler pass
+# ---------------------------------------------------------------------------
+def test_eviction_frees_pages_for_immediate_admission(whisper_setup,
+                                                      ref_engine):
+    """With a full arena and a queued request, the admit pass right after
+    an EOS eviction admits it — pages return to the allocators before
+    release() returns, not at some later sweep."""
+    cfg, params = whisper_setup
+    mel = _mels(cfg, 1)[0]
+    first = ref_engine.transcribe(mel, max_new=3)[0].tokens[0]
+    eng = ServeEngine(cfg, params, max_len=16, quant="none",
+                      eos_id=int(first))
+    # one slot's worth of pages: 1 trash + 1 self, 1 trash + 1 cross
+    sched = eng.paged_scheduler(n_slots=2, n_frames=N_FRAMES, page_size=4,
+                                n_pages=2, n_cross_pages=2)
+    r0 = sched.submit(mel, max_new=8)
+    r1 = sched.submit(_mels(cfg, 2)[1], max_new=8)     # distinct utterance
+    assert sched.admit() == [r0]                       # arena full: r1 waits
+    assert sched.n_queued == 1
+    assert not sched.pool.can_alloc(1, sched.pool.n_cross_per_req)
+    events = sched.decode_step()                       # r0 hits EOS, evicted
+    assert any(ev.rid == r0 and ev.done for ev in events)
+    assert sched.admit() == [r1]                       # freed pages reused NOW
+    assert sched.finished[r0].tokens == [int(first)]
+
+
+def test_arena_too_small_raises_instead_of_livelock(whisper_setup):
+    """A request that cannot fit even with every active slot preempted is
+    a configuration error, not an infinite admission stall."""
+    cfg, params = whisper_setup
+    eng = ServeEngine(cfg, params, max_len=16, quant="none", eos_id=-1)
+    # cross arena: 1 trash + 1 page, but cross_page_size=4 -> 2 pages/req
+    sched = eng.paged_scheduler(n_slots=2, n_frames=N_FRAMES, page_size=4,
+                                cross_page_size=4, n_cross_pages=2)
+    sched.submit(_mels(cfg, 1)[0], max_new=2)
+    with pytest.raises(RuntimeError, match="arena too small"):
+        sched.run()
+
+
+# ---------------------------------------------------------------------------
+# Zero retraces across paged schedules
+# ---------------------------------------------------------------------------
+def test_zero_retraces_across_paged_schedules(whisper_setup):
+    """Admissions, share hits, evictions, and preemptions are host table
+    edits + pre-traced splices: the engine's step_fn traces exactly once
+    per page geometry across any schedule."""
+    cfg, params = whisper_setup
+    eng = ServeEngine(cfg, params, max_len=32, quant="none", eos_id=-1)
+    mels = _mels(cfg, 4)
+    sched = eng.paged_scheduler(n_slots=2, n_frames=N_FRAMES, page_size=4,
+                                n_pages=5)             # tight: preempts
+    sched.submit(mels[0], max_new=2)
+    sched.run()                                        # warmup: one trace
+    traces0 = eng._step_traces
+    assert traces0 == 1
+    for m in mels[1:3]:
+        sched.submit(m, max_new=5)
+    sched.run()
+    for m in (mels[3], mels[3]):                       # second wave, share hit
+        sched.submit(m, max_new=3)                     # (co-resident duplicate)
+    sched.run()
+    assert eng._step_traces == traces0                 # ZERO retraces
+    assert sched.shared_hits >= 1
+
+
+def test_paged_insert_roundtrips_prefill_state(whisper_setup):
+    """Splicing a batch-1 prefill into the arenas and gathering it back
+    through the block table reproduces the contiguous cache bytes — the
+    §15.2 layout equivalence behind token parity."""
+    cfg, params = whisper_setup
+    eng = ServeEngine(cfg, params, max_len=16, quant="none", eos_id=-1)
+    pool = PagedKVPool(cfg, params, n_slots=2, max_len=16,
+                       n_frames=N_FRAMES, page_size=4)
+    mel = jnp.asarray(_mels(cfg, 1)[0])
+    _, req = eng._prefill_jit(eng._serve_params, mel)
+    slot = pool.acquire()
+    pool.alloc_cross_pages(slot, "d0")
+    pool.alloc_self_page(slot)
+    pool.sync()
+    pool.insert(slot, req)
+    ls = pool.state.layer_states
+    # cross pages hold the encoder KV, bit-for-bit
+    got_k = np.asarray(ls.cross_k[:, pool._ct[slot]]).reshape(
+        cfg.num_layers, N_FRAMES, cfg.num_kv_heads, cfg.head_dim)
+    want_k = np.asarray(req.layer_states.cross_kv[0][:, 0]).astype(
+        got_k.dtype)
+    np.testing.assert_array_equal(got_k, want_k)
+    # per-slot length/step counters match the request's
+    assert int(ls.length[0, slot]) == \
+        int(req.layer_states.self_kv.length[0])
+    assert int(pool.state.step[slot]) == int(req.step)

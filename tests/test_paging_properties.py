@@ -1,0 +1,216 @@
+"""Property suite for the paged KV-cache allocator + copy-on-write
+(DESIGN.md §15.1-§15.2, via the tests/_hyp.py optional-hypothesis shim):
+under ANY interleaving of alloc/retain/release, no page is handed out
+while its refcount is live, free + allocated always equals the
+allocatable arena size, a release to refcount 0 returns the page to the
+free list, and ``ensure_private`` (CoW) never mutates a shared page —
+only the writer's table repoints."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hyp import given, settings, st
+
+from repro.configs.registry import get_smoke_config
+from repro.models.model import ServeState
+from repro.serve.paging import PageAllocator, PagedKVPool, PagesExhausted
+
+N_FRAMES = 8
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator invariants
+# ---------------------------------------------------------------------------
+def _check_invariants(alloc: PageAllocator, model: dict) -> None:
+    """The §15.1 allocator contract against a dict refcount model."""
+    # free + allocated == allocatable arena size, always
+    assert alloc.n_free + alloc.n_allocated == alloc.n_allocatable
+    # the allocator's refcounts match the model's exactly
+    for p in range(alloc.n_pages):
+        assert alloc.refcount[p] == model.get(p, 0)
+    # no live page sits on any free list; every dead one does
+    free = {p for lst in alloc._free for p in lst}
+    live = {p for p, rc in model.items() if rc > 0}
+    assert not (free & live)
+    dead = set(range(alloc.reserve, alloc.n_pages)) - live
+    assert free == dead
+    assert alloc.n_free == len(free)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=2),      # reserved (trash) pages
+       st.integers(min_value=1, max_value=24),     # allocatable pages
+       st.integers(min_value=1, max_value=4),      # shard hint
+       st.lists(st.tuples(st.integers(min_value=0, max_value=2),
+                          st.integers(min_value=0, max_value=10 ** 6)),
+                max_size=80))
+def test_allocator_invariants_under_any_op_sequence(reserve, extra, n_shards,
+                                                    ops):
+    """Property: any alloc/retain/release interleaving preserves every
+    §15.1 invariant, and alloc NEVER double-allocates a live page."""
+    alloc = PageAllocator(reserve + extra, n_shards, reserve=reserve)
+    model: dict = {}
+    _check_invariants(alloc, model)
+    for kind, pick in ops:
+        live = sorted(p for p, rc in model.items() if rc > 0)
+        if kind == 0:                                  # alloc
+            if alloc.n_free == 0:
+                with pytest.raises(PagesExhausted):
+                    alloc.alloc(prefer=pick)
+            else:
+                page = alloc.alloc(prefer=pick)
+                # never a reserved page, never a live page
+                assert page >= reserve
+                assert model.get(page, 0) == 0
+                model[page] = 1
+        elif kind == 1 and live:                       # retain
+            page = live[pick % len(live)]
+            alloc.retain(page)
+            model[page] += 1
+        elif kind == 2 and live:                       # release
+            page = live[pick % len(live)]
+            freed = alloc.release(page)
+            model[page] -= 1
+            # release to refcount 0 returns the page to the free list...
+            assert freed == (model[page] == 0)
+            if freed:
+                # ...immediately: the very next alloc can hand it back
+                assert page in alloc._free[alloc.page_shard(page)]
+        _check_invariants(alloc, model)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=16), st.integers(min_value=1,
+                                                           max_value=4))
+def test_allocator_drains_to_exactly_the_allocatable_set(n, n_shards):
+    """Draining the arena yields each non-reserved page exactly once;
+    refilling restores full capacity."""
+    alloc = PageAllocator(n + 1, n_shards, reserve=1)
+    pages = [alloc.alloc() for _ in range(n)]
+    assert sorted(pages) == list(range(1, n + 1))      # all, once, no trash
+    with pytest.raises(PagesExhausted):
+        alloc.alloc()
+    for p in pages:
+        assert alloc.release(p)
+    assert alloc.n_free == n
+
+
+def test_allocator_rejects_dead_page_ops():
+    alloc = PageAllocator(4, reserve=1)
+    with pytest.raises(ValueError):
+        alloc.retain(2)                                # never allocated
+    with pytest.raises(ValueError):
+        alloc.release(2)
+    p = alloc.alloc()
+    alloc.release(p)
+    with pytest.raises(ValueError):
+        alloc.release(p)                               # already freed
+    with pytest.raises(ValueError):
+        PageAllocator(1, reserve=1)                    # nothing allocatable
+
+
+def test_allocator_prefers_requested_shard():
+    alloc = PageAllocator(8, n_shards=4, reserve=0)    # shards of 2 pages
+    assert alloc.page_shard(alloc.alloc(prefer=2)) == 2
+    assert alloc.page_shard(alloc.alloc(prefer=2)) == 2
+    # preferred shard dry -> falls over to the fullest shard, not an error
+    assert alloc.page_shard(alloc.alloc(prefer=2)) != 2
+
+
+# ---------------------------------------------------------------------------
+# Copy-on-write never mutates the shared page (DESIGN.md §15.2)
+# ---------------------------------------------------------------------------
+def _patterned_pool(n_slots=2, page_size=4, n_pages=6):
+    """A tiny paged pool whose self arena holds a distinct value at every
+    element, so any stray write is detectable bit-for-bit."""
+    cfg = get_smoke_config("whisper-tiny")
+    pool = PagedKVPool(cfg, None, n_slots=n_slots, max_len=16,
+                       n_frames=N_FRAMES, page_size=page_size,
+                       n_pages=n_pages)
+    ls = pool.state.layer_states
+    k = jnp.arange(ls.self_k.size, dtype=jnp.float32).reshape(
+        ls.self_k.shape).astype(ls.self_k.dtype)
+    pool.state = ServeState(ls._replace(self_k=k, self_v=k + 1.0),
+                            pool.state.step)
+    return pool
+
+
+def _page(pool, p):
+    ls = pool.state.layer_states
+    return (np.asarray(ls.self_k[:, p]), np.asarray(ls.self_v[:, p]))
+
+
+def test_cow_split_copies_and_never_mutates_shared_page():
+    pool = _patterned_pool()
+    src = pool.alloc_self_page(0)
+    aliased = pool.alias_self_page(1, 0, 0)
+    assert aliased == src and pool.self_alloc.refcount[src] == 2
+    before_k, before_v = _page(pool, src)
+
+    fresh = pool.ensure_private(1, 0)
+    assert fresh != src
+    # the shared page is bit-identical to before the split
+    after_k, after_v = _page(pool, src)
+    np.testing.assert_array_equal(after_k, before_k)
+    np.testing.assert_array_equal(after_v, before_v)
+    # the private copy carries the same bytes, under the writer's table
+    fk, fv = _page(pool, fresh)
+    np.testing.assert_array_equal(fk, before_k)
+    np.testing.assert_array_equal(fv, before_v)
+    assert pool._bt[1, 0] == fresh and pool._bt[0, 0] == src
+    # refcounts reflect the split; already-private pages are a no-op
+    assert pool.self_alloc.refcount[src] == 1
+    assert pool.self_alloc.refcount[fresh] == 1
+    assert pool.ensure_private(1, 0) == fresh
+    assert pool.ensure_private(0, 0) == src
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=2, max_value=4),          # slots sharing the page
+       st.integers(min_value=0, max_value=3))          # which slot writes
+def test_cow_property_any_sharer_splits_without_mutation(n_sharers, writer):
+    """Property: with ANY number of slots aliasing one physical page, a
+    CoW split by ANY of them leaves the shared page bytes untouched and
+    every other sharer's table still pointing at it."""
+    writer = writer % n_sharers
+    pool = _patterned_pool(n_slots=4, n_pages=10)
+    src = pool.alloc_self_page(0)
+    for s in range(1, n_sharers):
+        pool.alias_self_page(s, 0, 0)
+    assert pool.self_alloc.refcount[src] == n_sharers
+    before_k, before_v = _page(pool, src)
+
+    fresh = pool.ensure_private(writer, 0)
+    if n_sharers == 1:
+        assert fresh == src                            # nothing shared
+        return
+    assert fresh != src
+    after_k, after_v = _page(pool, src)
+    np.testing.assert_array_equal(after_k, before_k)
+    np.testing.assert_array_equal(after_v, before_v)
+    assert pool.self_alloc.refcount[src] == n_sharers - 1
+    for s in range(n_sharers):
+        want = fresh if s == writer else src
+        assert pool._bt[s, 0] == want
+
+
+def test_release_returns_cross_refs_and_unpublishes_digest():
+    """Slot release drops every page reference it holds and retires the
+    shared digest at refcount 0 — the §15.2 half of the EOS-reuse
+    guarantee (scheduler half in tests/test_paging.py)."""
+    pool = _patterned_pool(n_pages=8)
+    pool.alloc_cross_pages(0, "digest-a")
+    pool.attach_shared(1, "digest-a")
+    pool.alloc_self_page(0)
+    pool.alloc_self_page(1)
+    slot0, slot1 = pool.acquire(), pool.acquire()
+    free_before = (pool.self_alloc.n_free, pool.cross_alloc.n_free)
+    pool.release(slot0)
+    assert pool.has_shared("digest-a")                 # slot1 still refs it
+    pool.release(slot1)
+    assert not pool.has_shared("digest-a")
+    assert pool.self_alloc.n_free == free_before[0] + 2
+    assert pool.cross_alloc.n_free == \
+        free_before[1] + pool.n_cross_per_req
+    # freed slots' table rows point at the trash page
+    assert not pool._bt[:2].any() and not pool._ct[:2].any()

@@ -201,10 +201,10 @@ def test_shard_aware_acquire_balances():
     from repro.serve.kvcache import SlotKVPool
     pool = object.__new__(SlotKVPool)
     pool.n_slots, pool.n_shards, pool.shard_size = 8, 4, 2
-    pool._free = list(range(8))
+    pool._init_free()
     picks = [pool.acquire() for _ in range(4)]
     assert sorted(p // 2 for p in picks) == [0, 1, 2, 3]
     # shard 0 frees both its slots -> next admission goes there
-    pool._free.extend([0, 1])
-    pool._free.sort()
+    pool.release(0, reset=False)
+    pool.release(1, reset=False)
     assert pool.acquire() // 2 == 0
