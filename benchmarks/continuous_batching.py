@@ -26,9 +26,23 @@ Invariants asserted every run (exit code gates CI via ``--smoke``):
   - continuous >= static on aggregate tok/s AND <= on p95 latency
   - zero decode step_fn retraces after warmup (fixed-shape slot pool)
   - per-request ledger PDP attribution sums to the batch total
+  - telemetry (DESIGN.md §16) invariants on a dedicated q8_0+offload
+    drain: every lifecycle span closes, span nesting holds, and the sum
+    of ledger-span FLOP deltas equals the ledger total EXACTLY (§16.2).
+    The drain is OUTSIDE the gated measurement — span recording is host
+    work per step, and the vs-static gate calibrates per-step cost, so
+    attaching telemetry there would fold its overhead into the gated
+    constants (the overhead budget itself is gated by
+    ``benchmarks.telemetry_overhead``)
+
+Latency percentiles (p50/p95/p99) come from the shared ``obs.metrics``
+histogram in exact (track_values) mode — one percentile implementation
+across the serving benchmarks, with the CI gates still comparing exact
+values, never bucket edges.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.continuous_batching [--smoke]
+      [--trace-out PATH] [--metrics-out PATH]
 
 Writes experiments/bench/continuous_batching.json.
 """
@@ -42,16 +56,26 @@ import jax
 import numpy as np
 
 from benchmarks.common import fmt_table, save
+from repro import obs
 from repro.configs.registry import get_config, get_smoke_config
 from repro.core import energy
 from repro.core.offload import OffloadEngine
 from repro.models import model as model_lib
+from repro.obs.metrics import LATENCY_BUCKETS_S, Histogram
 from repro.serve.engine import ServeEngine
 from repro.serve.scheduler import ContinuousBatchingScheduler
 
 
-def _percentile(xs: List[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+def _latency_summary(xs: List[float]) -> Dict[str, float]:
+    """p50/p95/p99 through the ONE shared percentile implementation
+    (repro.obs.metrics, DESIGN.md §16.3), in exact mode: the continuous-
+    vs-static p95 gate compares real values, so the summary must not
+    quantize to bucket edges."""
+    h = Histogram("latency_s", LATENCY_BUCKETS_S, track_values=True)
+    for x in xs:
+        h.observe(x)
+    return {"p50_s": h.percentile(50), "p95_s": h.percentile(95),
+            "p99_s": h.percentile(99)}
 
 
 def _calibrate(engine: ServeEngine, mel0: np.ndarray, n_slots: int,
@@ -123,8 +147,8 @@ def _run_static(engine: ServeEngine, mels: List[np.ndarray],
             tokens += min(max_news[k], res[0].steps)  # row's useful tokens
         i = j
     lat = [done_t[k] - float(arrivals[k]) for k in range(n)]
-    return {"tok_s": tokens / max(t, 1e-9), "p50_s": _percentile(lat, 50),
-            "p95_s": _percentile(lat, 95), "makespan_s": t,
+    return {"tok_s": tokens / max(t, 1e-9), **_latency_summary(lat),
+            "makespan_s": t,
             "tokens": tokens, "pdp_j": energy.pdp(t, energy.TPU_V5E_W)}
 
 
@@ -163,8 +187,8 @@ def _run_continuous(engine: ServeEngine, mels: List[np.ndarray],
     assert abs(per_req_sum - att["batch_pdp_j"]) <= \
         1e-6 * max(1.0, att["batch_pdp_j"]), \
         "per-request PDP attribution must sum to the batch total (§11.3)"
-    return {"tok_s": tokens / max(t, 1e-9), "p50_s": _percentile(lat, 50),
-            "p95_s": _percentile(lat, 95), "makespan_s": t,
+    return {"tok_s": tokens / max(t, 1e-9), **_latency_summary(lat),
+            "makespan_s": t,
             "tokens": tokens, "pdp_j": energy.pdp(t, energy.TPU_V5E_W),
             "attributed_pdp_j": per_req_sum,
             # KV memory accounting (DESIGN.md §15.4): bytes the pool
@@ -206,7 +230,28 @@ def _variant(name: str, cfg, params, quant: str, offload, smoke: bool,
             "mean_gap_s": float(mean_gap)}
 
 
-def run(smoke: bool = False) -> dict:
+def _telemetry_drain(cfg, params, smoke: bool) -> obs.Telemetry:
+    """Dedicated q8_0+offload scheduler drain carrying telemetry, for the
+    §16.2 invariant checks. Deliberately NOT the gated engines: the
+    vs-static gate replays calibrated per-step costs, and span recording
+    is real host work per step — its budget is gated separately by
+    ``benchmarks.telemetry_overhead``."""
+    rng = np.random.default_rng(7)
+    tele = obs.Telemetry()
+    engine = ServeEngine(cfg, params, max_len=24, quant="q8_0",
+                         offload=OffloadEngine(interpret=True,
+                                               prefer_pallas=False),
+                         eos_id=-1, telemetry=tele)
+    sched = ContinuousBatchingScheduler(engine, n_slots=2, n_frames=16)
+    for _ in range(4 if smoke else 6):
+        mel = rng.standard_normal((1, 16, cfg.n_mels)).astype(np.float32)
+        sched.submit(mel, max_new=int(rng.integers(3, 8)))
+    sched.run()
+    return tele
+
+
+def run(smoke: bool = False, trace_out: str = None,
+        metrics_out: str = None) -> dict:
     cfg = get_smoke_config("whisper-tiny") if smoke \
         else get_config("whisper-tiny")
     params = model_lib.init_params(jax.random.PRNGKey(0), cfg, 448)
@@ -217,6 +262,7 @@ def run(smoke: bool = False) -> dict:
              OffloadEngine(interpret=True, prefer_pallas=False))]:
         rng = np.random.default_rng(0)          # same trace both variants
         variants.append(_variant(name, cfg, params, quant, off, smoke, rng))
+    tele = _telemetry_drain(cfg, params, smoke)
 
     rows = []
     for v in variants:
@@ -224,6 +270,7 @@ def run(smoke: bool = False) -> dict:
             r = v[mode]
             rows.append([v["name"], mode, f"{r['tok_s']:.1f}",
                          f"{r['p50_s']*1e3:.1f}", f"{r['p95_s']*1e3:.1f}",
+                         f"{r['p99_s']*1e3:.1f}",
                          f"{r['pdp_j']:.1f}",
                          (f"{r['kv_committed_bytes']/1024:.0f}"
                           if "kv_committed_bytes" in r else "-"),
@@ -232,7 +279,8 @@ def run(smoke: bool = False) -> dict:
     print("whisper-tiny serving under staggered Poisson arrivals "
           f"({'smoke' if smoke else 'full'} config)")
     print(fmt_table(rows, ["variant", "mode", "tok/s", "p50(ms)", "p95(ms)",
-                           "PDP(J)", "KV committed(KiB)", "KV util"]))
+                           "p99(ms)", "PDP(J)", "KV committed(KiB)",
+                           "KV util"]))
     ok = True
     for v in variants:
         win = (v["speedup_tok_s"] >= 1.0
@@ -243,7 +291,21 @@ def run(smoke: bool = False) -> dict:
               f"p95 {v['p95_ratio']:.2f}x lower, "
               f"{v['retraces_after_warmup']} retraces after warmup "
               f"-> {'ok' if win and zero_retrace else 'FAIL'}")
-    out = {"smoke": smoke, "variants": variants, "gate_ok": ok}
+    cons = tele.ledger_consistent()
+    tele_checks = {"ledger_exact": bool(cons["exact"]),
+                   "spans_closed": tele.tracer.all_closed(),
+                   "nesting_ok": not tele.tracer.check_nesting()}
+    ok = ok and all(tele_checks.values())
+    print("telemetry: " + " ".join(f"{k}={'ok' if val else 'FAIL'}"
+                                   for k, val in tele_checks.items())
+          + f" (claimed {cons['claimed_flops']} == "
+            f"ledger {cons['ledger_flops']} FLOPs)")
+    if trace_out:
+        print("trace written:", tele.write_trace(trace_out))
+    if metrics_out:
+        print("metrics written:", tele.write_metrics(metrics_out))
+    out = {"smoke": smoke, "variants": variants, "gate_ok": ok,
+           "telemetry_checks": tele_checks, "ledger_consistency": cons}
     save("continuous_batching", out)
     return out
 
@@ -252,8 +314,13 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload for the CI gate")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the q8_0+offload variant's Perfetto trace")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write its Prometheus metrics exposition")
     args = ap.parse_args(argv)
-    out = run(smoke=args.smoke)
+    out = run(smoke=args.smoke, trace_out=args.trace_out,
+              metrics_out=args.metrics_out)
     return 0 if out["gate_ok"] else 1
 
 

@@ -28,10 +28,20 @@ bf16 AND q8_0+offload. Gates, asserted every run (CI via ``--smoke``):
     preempt-and-recompute) still reproduces the contiguous token streams
 
 Committed-KV bytes and peak utilization are reported next to tok/s and
-p95 for every mode (DESIGN.md §15.4).
+p50/p95/p99 for every mode (DESIGN.md §15.4); the percentiles come from
+the shared ``obs.metrics`` histogram in exact (track_values) mode.
+
+Telemetry (DESIGN.md §16) rides the q8_0+offload variant's paged AND
+tight-arena engines, adding gates: every lifecycle span closes through
+prefix hits, CoW splits, preemptions and replays; span nesting holds;
+and the sum of ledger-span FLOP deltas equals the ledger total EXACTLY
+(§16.2). ``--trace-out``/``--metrics-out`` export the paged engine's
+trace (Perfetto trace_event JSON, validated by tools/check_trace.py in
+CI) and metrics exposition.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.paged_serving [--smoke]
+      [--trace-out PATH] [--metrics-out PATH]
 
 Writes experiments/bench/paged_serving.json.
 """
@@ -45,14 +55,22 @@ import jax
 import numpy as np
 
 from benchmarks.common import fmt_table, save
+from repro import obs
 from repro.configs.registry import get_config, get_smoke_config
 from repro.core.offload import OffloadEngine
 from repro.models import model as model_lib
+from repro.obs.metrics import LATENCY_BUCKETS_S, Histogram
 from repro.serve.engine import ServeEngine
 
 
-def _percentile(xs: List[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+def _latency_summary(xs: List[float]) -> Dict[str, float]:
+    """p50/p95/p99 (step units) through the ONE shared percentile
+    implementation (repro.obs.metrics, DESIGN.md §16.3), exact mode."""
+    h = Histogram("latency_steps", LATENCY_BUCKETS_S, track_values=True)
+    for x in xs:
+        h.observe(x)
+    return {"p50_steps": h.percentile(50), "p95_steps": h.percentile(95),
+            "p99_steps": h.percentile(99)}
 
 
 def _drive(sched, mels: List[np.ndarray], max_news: List[int],
@@ -91,8 +109,7 @@ def _drive(sched, mels: List[np.ndarray], max_news: List[int],
     return {"tokens": [got[r].tokens for r in rids],
             "steps": steps, "wall_s": wall,
             "tok_s": steps / max(wall, 1e-9),
-            "p50_steps": _percentile(lat, 50),
-            "p95_steps": _percentile(lat, 95),
+            **_latency_summary(lat),
             "kv_committed_bytes": sched.kv_committed_bytes,
             "kv_used_peak_bytes": sched.kv_used_peak,
             "kv_utilization": sched.kv_utilization_peak,
@@ -121,7 +138,7 @@ def _workload(cfg, smoke: bool, rng: np.random.Generator):
 
 
 def _variant(name: str, cfg, params, quant: str, make_offload,
-             smoke: bool, mesh=None) -> Dict[str, object]:
+             smoke: bool, mesh=None, telemetry=None) -> Dict[str, object]:
     rng = np.random.default_rng(0)        # same trace for every variant
     mels, max_news, arrivals, n_frames, hi = _workload(cfg, smoke, rng)
     n_slots = 4
@@ -137,21 +154,24 @@ def _variant(name: str, cfg, params, quant: str, make_offload,
                 cross_page_size=n_frames,
                 n_cross_pages=1 + len({id(m) for m in mels}))
 
-    def engine():
+    def engine(tele=None):
         return ServeEngine(cfg, params, max_len=max_len, quant=quant,
-                           offload=make_offload(), eos_id=-1)
+                           offload=make_offload(), eos_id=-1,
+                           telemetry=tele)
 
     eng_c = engine()
     contig = _drive(eng_c.scheduler(n_slots=n_slots, n_frames=n_frames),
                     mels, max_news, arrivals)
-    eng_p = engine()
+    eng_p = engine(telemetry)
     sched_p = eng_p.paged_scheduler(n_slots=n_slots_p, n_frames=n_frames,
                                     **geom)
     paged = _drive(sched_p, mels, max_news, arrivals)
 
     # deliberately tight arena: fewer pages than the actives want, so
-    # decode MUST preempt-and-recompute — and stay token-exact
-    eng_t = engine()
+    # decode MUST preempt-and-recompute — and stay token-exact. Its own
+    # telemetry proves the preempt/replay path keeps the §16.2 invariants
+    tele_t = obs.Telemetry() if telemetry is not None else None
+    eng_t = engine(tele_t)
     tight_pages = 2 + 2 * pages_per       # ~2 full slots' worth of pages
     sched_t = eng_t.paged_scheduler(n_slots=n_slots, n_frames=n_frames,
                                     page_size=page_size,
@@ -174,6 +194,15 @@ def _variant(name: str, cfg, params, quant: str, make_offload,
                          and tight["step_traces"] == 1),
         "mem_2x": rpb_p >= 2 * rpb_c,
     }
+    if telemetry is not None:
+        # §16.2 invariants over the instrumented paged + tight engines:
+        # exact ledger attribution, closed lifecycles, clean nesting —
+        # through prefix hits, CoW splits, preemptions, and replays
+        for tag, tl in (("paged", telemetry), ("tight", tele_t)):
+            cons = tl.ledger_consistent()
+            checks[f"tele_{tag}_ledger_exact"] = bool(cons["exact"])
+            checks[f"tele_{tag}_spans_closed"] = tl.tracer.all_closed()
+            checks[f"tele_{tag}_nesting"] = not tl.tracer.check_nesting()
     modes = {"contiguous": contig, "paged": paged, "tight": tight}
     if mesh is not None:
         # the multidev leg: the SAME paged geometry with the arenas'
@@ -198,7 +227,8 @@ def _variant(name: str, cfg, params, quant: str, make_offload,
             "checks": checks, "ok": all(checks.values())}
 
 
-def run(smoke: bool = False) -> dict:
+def run(smoke: bool = False, trace_out: str = None,
+        metrics_out: str = None) -> dict:
     cfg = get_smoke_config("whisper-tiny") if smoke \
         else get_config("whisper-tiny")
     params = model_lib.init_params(jax.random.PRNGKey(0), cfg, 448)
@@ -206,12 +236,13 @@ def run(smoke: bool = False) -> dict:
     if len(jax.devices()) >= 2:           # the multidev CI leg
         from repro.launch.mesh import make_serve_mesh
         mesh = make_serve_mesh()
+    tele = obs.Telemetry()                # rides the q8 paged engine
     variants = [
         _variant("dense", cfg, params, "none", lambda: None, smoke,
                  mesh=mesh),
         _variant("q8_0+offload", cfg, params, "q8_0",
                  lambda: OffloadEngine(interpret=True, prefer_pallas=False),
-                 smoke, mesh=mesh),
+                 smoke, mesh=mesh, telemetry=tele),
     ]
 
     rows = []
@@ -219,14 +250,15 @@ def run(smoke: bool = False) -> dict:
         for mode in v["modes"]:
             r = v[mode]
             rows.append([v["name"], mode, f"{r['tok_s']:.1f}",
-                         f"{r['p95_steps']:.0f}",
+                         f"{r['p95_steps']:.0f}", f"{r['p99_steps']:.0f}",
                          f"{r['kv_committed_bytes'] / 1024:.0f}",
                          f"{r['kv_utilization']:.2f}",
                          str(r["active_peak"])])
     print("whisper-tiny paged vs contiguous KV serving, shared-prefix "
           f"Poisson trace ({'smoke' if smoke else 'full'} config)")
     print(fmt_table(rows, ["variant", "mode", "tok/s", "p95(steps)",
-                           "KV committed(KiB)", "KV util", "peak active"]))
+                           "p99(steps)", "KV committed(KiB)", "KV util",
+                           "peak active"]))
     ok = True
     for v in variants:
         ok = ok and v["ok"]
@@ -236,7 +268,12 @@ def run(smoke: bool = False) -> dict:
               f"{v['shared_hits']} prefix hits, {v['preemptions']} "
               f"preemptions (tight) | {detail} "
               f"-> {'ok' if v['ok'] else 'FAIL'}")
-    out = {"smoke": smoke, "variants": variants, "gate_ok": ok}
+    if trace_out:
+        print("trace written:", tele.write_trace(trace_out))
+    if metrics_out:
+        print("metrics written:", tele.write_metrics(metrics_out))
+    out = {"smoke": smoke, "variants": variants, "gate_ok": ok,
+           "ledger_consistency": tele.ledger_consistent()}
     save("paged_serving", out)
     return out
 
@@ -245,8 +282,13 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny workload for the CI gate")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the q8 paged engine's Perfetto trace")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write its Prometheus metrics exposition")
     args = ap.parse_args(argv)
-    out = run(smoke=args.smoke)
+    out = run(smoke=args.smoke, trace_out=args.trace_out,
+              metrics_out=args.metrics_out)
     return 0 if out["gate_ok"] else 1
 
 

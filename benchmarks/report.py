@@ -52,6 +52,8 @@ BENCHMARK_INDEX = [
      "mesh-sharded vs single-device serve (token parity + by_device)"),
     ("paged_serving", "§5.1 E2E / DESIGN.md §15",
      "paged vs contiguous KV serving (parity + requests-per-GB)"),
+    ("telemetry_overhead", "DESIGN.md §16",
+     "telemetry on/off lockstep drain (≤3% step overhead + §16.2 exactness)"),
 ]
 
 

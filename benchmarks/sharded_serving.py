@@ -25,6 +25,10 @@ When launched with fewer than 2 visible devices the benchmark re-execs
 itself in a subprocess with the forced-host flag (jax pins the device
 count at first init — same pattern as launch/dryrun.py).
 
+Per-request latency percentiles (p50/p95/p99) come from the shared
+``obs.metrics`` histogram in exact (track_values) mode — the one
+percentile implementation across serving benchmarks (DESIGN.md §16.3).
+
 Usage:
   PYTHONPATH=src python -m benchmarks.sharded_serving [--smoke]
 
@@ -77,6 +81,19 @@ def _reexec_forced(smoke: bool) -> dict:
             "error": f"forced-host subprocess exited {cp.returncode}"}
 
 
+def _latency_summary(xs: List[float]) -> Dict[str, float]:
+    """p50/p95/p99 through the ONE shared percentile implementation
+    (repro.obs.metrics, DESIGN.md §16.3) in exact mode, matching the
+    other serving benchmarks."""
+    from repro.obs.metrics import LATENCY_BUCKETS_S, Histogram
+
+    h = Histogram("latency_s", LATENCY_BUCKETS_S, track_values=True)
+    for x in xs:
+        h.observe(x)
+    return {"p50_s": h.percentile(50), "p95_s": h.percentile(95),
+            "p99_s": h.percentile(99)}
+
+
 def _serve_trace(engine, mels: List, max_news: List[int], n_slots: int,
                  n_frames: int) -> Dict[str, object]:
     """Drive one engine's scheduler over the arrival trace; return token
@@ -91,6 +108,7 @@ def _serve_trace(engine, mels: List, max_news: List[int], n_slots: int,
     return {"tokens": tokens, "wall_s": wall, "steps": steps,
             "tok_s": steps / max(wall, 1e-9),
             "step_traces": sched.step_traces,
+            **_latency_summary([got[r].total_s for r in rids]),
             # KV memory accounting (DESIGN.md §15.4)
             "kv_committed_bytes": sched.kv_committed_bytes,
             "kv_utilization": sched.kv_utilization_peak}
@@ -177,13 +195,16 @@ def run(smoke: bool = False) -> dict:
         for mode in ("single", "sharded"):
             r = v[mode]
             rows.append([v["name"], mode, f"{r['tok_s']:.1f}",
+                         f"{r['p50_s']*1e3:.0f}", f"{r['p95_s']*1e3:.0f}",
+                         f"{r['p99_s']*1e3:.0f}",
                          str(r["steps"]), str(r["step_traces"]),
                          f"{r['kv_committed_bytes']/1024:.0f}",
                          f"{r['kv_utilization']:.2f}"])
     n_dev = len(jax.devices())
     print(f"whisper-tiny sharded serving on a {n_dev}-device host mesh "
           f"({'smoke' if smoke else 'full'} config)")
-    print(fmt_table(rows, ["variant", "mode", "tok/s", "steps", "traces",
+    print(fmt_table(rows, ["variant", "mode", "tok/s", "p50(ms)", "p95(ms)",
+                           "p99(ms)", "steps", "traces",
                            "KV committed(KiB)", "KV util"]))
     ok = True
     for v in variants:

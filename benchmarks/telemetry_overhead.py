@@ -1,0 +1,241 @@
+"""Telemetry overhead + consistency gate (DESIGN.md §16.4; guards the
+§5.1 serving-path measurements every other benchmark reports).
+
+The observability subsystem promises to be ignorable: spans, instants,
+and metric updates are host-side bookkeeping between jitted steps, never
+inside them, so switching telemetry on must not move the serving numbers.
+This benchmark prices that promise and gates it: two identical
+q8_0+offload whisper-tiny engines — one with a live ``obs.Telemetry``,
+one with ``telemetry=None`` — drain the SAME continuous-batching request
+trace in lockstep, every decode step timed individually.
+
+Gates, asserted every run (exit code gates CI via ``--smoke``):
+
+  - overhead: telemetry-on per-decode-step cost <= 1.03x telemetry-off
+    (the ≤3% budget from DESIGN.md §16.4). The two schedulers advance in
+    LOCKSTEP — identical traces, alternating single steps — and the
+    overhead estimate is the MEDIAN of the paired per-step deltas over
+    the median off-step cost. Pairing cancels run-scale drift (frequency
+    scaling, cache pressure land on both modes alike); the median
+    rejects the spikes (GC, noisy neighbors) that make min- or
+    mean-based estimates flap on a shared machine while keeping the
+    deterministic telemetry cost every step pays
+  - zero retraces with telemetry ON: instrumenting must not perturb the
+    jitted step (one step trace across the whole drain)
+  - ledger consistency EXACT: the sum of ledger-span FLOP/call deltas
+    equals the engine ledger's totals as integers (§16.2) — no double
+    count, no leak
+  - lifecycle closure: every submitted rid's phase spans close, and
+    per-track span nesting holds
+  - histogram soundness: for every registry histogram,
+    ``sum(bucket_counts) == count`` (the +Inf bucket catches the tail)
+  - trace validity: the emitted Perfetto JSON passes
+    ``tools/check_trace.py`` structural validation
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.telemetry_overhead [--smoke]
+      [--trace-out PATH] [--metrics-out PATH]
+
+Writes experiments/bench/telemetry_overhead.json (and the trace/metrics
+artifacts next to it by default).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import os
+import statistics
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import OUT_DIR, ROOT, fmt_table, save
+from repro import obs
+from repro.configs.registry import get_config, get_smoke_config
+from repro.core.offload import OffloadEngine
+from repro.models import model as model_lib
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import ContinuousBatchingScheduler
+
+OVERHEAD_BUDGET = 0.03
+
+
+def _load_check_trace():
+    """Import tools/check_trace.py by path (tools/ is not a package)."""
+    path = os.path.join(ROOT, "tools", "check_trace.py")
+    spec = importlib.util.spec_from_file_location("check_trace", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _drain(engine: ServeEngine, mels: List[np.ndarray],
+           max_news: List[int], n_slots: int, n_frames: int) -> float:
+    """One full scheduler drain (used for warmup); returns wall seconds."""
+    sched = ContinuousBatchingScheduler(engine, n_slots=n_slots,
+                                        n_frames=n_frames)
+    for m, mn in zip(mels, max_news):
+        sched.submit(m, max_new=mn)
+    t0 = time.perf_counter()
+    sched.run()
+    return time.perf_counter() - t0
+
+
+def _paired_drain(engines: Dict[str, ServeEngine], mels: List[np.ndarray],
+                  max_news: List[int], n_slots: int, n_frames: int,
+                  step_ts: Dict[str, List[float]]) -> None:
+    """Drain the SAME trace through both modes' schedulers in LOCKSTEP,
+    timing every ``decode_step`` call individually. The two schedules are
+    identical (same arrivals, same budgets, fixed-shape batch step), so
+    each adjacent off/on step pair sees the same machine state — run-
+    scale drift (frequency scaling, cache pressure) lands on both modes
+    alike instead of splitting them the way coarser interleaving lets
+    it."""
+    scheds = {mode: ContinuousBatchingScheduler(eng, n_slots=n_slots,
+                                                n_frames=n_frames)
+              for mode, eng in engines.items()}
+    for s in scheds.values():
+        for m, mn in zip(mels, max_news):
+            s.submit(m, max_new=mn)
+    while any(s.n_queued or s.n_active for s in scheds.values()):
+        for mode, s in scheds.items():
+            if s.n_queued:
+                s.admit()
+            if s.n_active:
+                t0 = time.perf_counter()
+                s.decode_step()
+                step_ts[mode].append(time.perf_counter() - t0)
+    for s in scheds.values():
+        # manual decode_step driving buffers metric observations; drain
+        # them into the registry outside the timed region (§16.4)
+        s.flush_telemetry()
+
+
+def run(smoke: bool = False, trace_out: str = None,
+        metrics_out: str = None) -> dict:
+    cfg = get_smoke_config("whisper-tiny") if smoke \
+        else get_config("whisper-tiny")
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg, 448)
+
+    n_slots = 4
+    n_req, n_frames = (8, 16) if smoke else (16, 32)
+    lo, hi = (3, 10) if smoke else (6, 24)
+    rounds = 5
+    rng = np.random.default_rng(0)
+    mels = [rng.standard_normal((1, n_frames, cfg.n_mels)).astype(np.float32)
+            for _ in range(n_req)]
+    max_news = [int(rng.integers(lo, hi + 1)) for _ in range(n_req)]
+
+    tele = obs.Telemetry()
+    engines = {
+        "off": ServeEngine(cfg, params, max_len=hi + 8, quant="q8_0",
+                           offload=OffloadEngine(interpret=True,
+                                                 prefer_pallas=False),
+                           eos_id=-1),
+        "on": ServeEngine(cfg, params, max_len=hi + 8, quant="q8_0",
+                          offload=OffloadEngine(interpret=True,
+                                                prefer_pallas=False),
+                          eos_id=-1, telemetry=tele),
+    }
+
+    # warmup: compile the admission prefill + shared decode step on both
+    # engines, then freeze the retrace counter — the zero-retrace gate
+    # below covers the measured rounds only
+    for eng in engines.values():
+        _drain(eng, mels[:2], max_news[:2], n_slots, n_frames)
+    traces0 = {k: eng._step_traces for k, eng in engines.items()}
+
+    # lockstep rounds -> paired per-step deltas. Pairing cancels drift,
+    # the median rejects spikes; the deterministic telemetry cost every
+    # step pays is exactly what survives both.
+    step_ts: Dict[str, List[float]] = {"off": [], "on": []}
+    for _ in range(rounds):
+        _paired_drain(engines, mels, max_news, n_slots, n_frames, step_ts)
+    n_pairs = min(len(step_ts["off"]), len(step_ts["on"]))
+    deltas = [step_ts["on"][i] - step_ts["off"][i] for i in range(n_pairs)]
+    med = {mode: statistics.median(ts) for mode, ts in step_ts.items()}
+    overhead = statistics.median(deltas) / max(med["off"], 1e-9)
+    retraces = {k: engines[k]._step_traces - traces0[k]
+                for k in engines}
+
+    # §16.2 consistency over everything the telemetry engine ran
+    # (warmup + all rounds): spans and ledger cover the same window
+    # because bind_ledger happens at engine construction
+    cons = tele.ledger_consistent()
+    tele.sync_ledger_metrics()
+    hist_ok = all(
+        sum(c for _, c in h["buckets"]) == h["count"]
+        for h in tele.metrics.snapshot()["histograms"].values())
+
+    trace_out = trace_out or os.path.join(OUT_DIR,
+                                          "telemetry_overhead.trace.json")
+    metrics_out = metrics_out or os.path.join(
+        OUT_DIR, "telemetry_overhead.metrics.prom")
+    os.makedirs(OUT_DIR, exist_ok=True)
+    tele.write_trace(trace_out)
+    tele.write_metrics(metrics_out)
+    import json as _json
+    with open(trace_out) as f:
+        trace_errors = _load_check_trace().validate(_json.load(f))
+
+    checks = {
+        "overhead_within_budget": overhead <= OVERHEAD_BUDGET,
+        "zero_retrace_on": retraces["on"] == 0,
+        "zero_retrace_off": retraces["off"] == 0,
+        "ledger_exact": bool(cons["exact"]),
+        "spans_closed": tele.tracer.all_closed(),
+        "nesting_ok": not tele.tracer.check_nesting(),
+        "histogram_sums": hist_ok,
+        "trace_valid": not trace_errors,
+    }
+    ok = all(checks.values())
+
+    rows = [[mode, f"{med[mode]*1e6:.1f}",
+             f"{len(step_ts[mode])}",
+             f"{n_slots / max(med[mode], 1e-9):.0f}",
+             str(retraces[mode])] for mode in ("off", "on")]
+    print(f"whisper-tiny telemetry overhead, {n_req} requests x {rounds} "
+          f"lockstep rounds ({'smoke' if smoke else 'full'} config)")
+    print(fmt_table(rows, ["telemetry", "med step(us)", "steps",
+                           "tok/s@med", "retraces"]))
+    print(f"overhead: {overhead*100:+.2f}% (budget {OVERHEAD_BUDGET:.0%}) | "
+          + " ".join(f"{k}={'ok' if v else 'FAIL'}"
+                     for k, v in checks.items())
+          + f" -> {'ok' if ok else 'FAIL'}")
+    print(f"ledger: claimed {cons['claimed_flops']} == "
+          f"{cons['ledger_flops']} FLOPs, {cons['claimed_calls']} == "
+          f"{cons['ledger_calls']} calls")
+    for e in trace_errors:
+        print(f"  trace: {e}")
+
+    out = {"smoke": smoke, "rounds": rounds, "n_req": n_req,
+           "median_step_s": med,
+           "n_steps": {k: len(v) for k, v in step_ts.items()},
+           "overhead": overhead,
+           "budget": OVERHEAD_BUDGET, "retraces": retraces,
+           "ledger_consistency": cons, "checks": checks, "gate_ok": ok,
+           "trace_path": trace_out, "metrics_path": metrics_out}
+    save("telemetry_overhead", out)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workload for the CI gate")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="Perfetto trace destination (default: "
+                         "experiments/bench/telemetry_overhead.trace.json)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="Prometheus exposition destination (default: "
+                         "experiments/bench/telemetry_overhead.metrics.prom)")
+    args = ap.parse_args(argv)
+    out = run(smoke=args.smoke, trace_out=args.trace_out,
+              metrics_out=args.metrics_out)
+    return 0 if out["gate_ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

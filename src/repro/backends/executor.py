@@ -27,6 +27,18 @@ from repro.sharding import ctx
 from repro.tuning import kernel_for
 
 
+def _note_dispatch(segment: str, backend_name: str, kernel: str) -> None:
+    """Count one registry dispatch on the active telemetry (DESIGN.md
+    §16.3). Dispatch resolution happens at jax *trace* time — host code
+    with no handle to thread through — so the process-global active
+    handle is the honest scope; a no-op when telemetry is off."""
+    from repro import obs                  # lazy: avoid import cycles
+    tele = obs.active()
+    if tele is not None:
+        tele.inc("repro_dispatch_total", segment=segment,
+                 backend=backend_name, kernel=kernel)
+
+
 def _flatten_leading(x: jax.Array):
     lead = x.shape[:-1]
     m = int(np.prod(lead)) if lead else 1
@@ -77,12 +89,16 @@ def split_matmul(x: jax.Array, w, burst: int, *,
                                 segment=MAIN, tiling=tiling, block_k=block_k,
                                 interpret=interpret, forceable=forceable,
                                 tuner=tuner)
-            fn = REGISTRY.dispatch(req, pin=backend)
+            b = REGISTRY.resolve(req, pin=backend)
+            _note_dispatch("main", b.name, kern)
+            fn = b.build(req)
         parts.append(fn(x[..., :k_main], _slice_k(w, 0, k_main)))
     if k_res:
         req = KernelRequest(kernel=kern, m=m, n=n, k=k_res, dtype=dtype,
                             segment=RESIDUAL, interpret=interpret)
-        fn = REGISTRY.dispatch(req)
+        b = REGISTRY.resolve(req)
+        _note_dispatch("residual", b.name, kern)
+        fn = b.build(req)
         parts.append(fn(x[..., k_main:], _slice_k(w, k_main, k)))
     if not parts:
         return jnp.zeros((*x.shape[:-1], n), jnp.float32)

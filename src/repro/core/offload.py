@@ -187,6 +187,13 @@ class OffloadEngine:
             self._recording.add(entry)
         elif not isinstance(x, jax.core.Tracer):
             self.ledger.account(entry)
+            # eager accounts land outside any ledger span; claiming them
+            # on the active telemetry keeps the DESIGN.md §16.2 exact
+            # span-FLOP == ledger-delta invariant under mixed usage
+            from repro import obs
+            tele = obs.active()
+            if tele is not None and tele._ledger is self.ledger:
+                tele.claim_eager(entry)
         return y
 
     def execute(self, x: jax.Array, w, entry: PlanEntry) -> jax.Array:

@@ -10,16 +10,25 @@ admission into a fixed-width slot batch, per-request eviction, streamed
 tokens, and exact per-request ledger/PDP attribution. ``--mesh`` serves
 sharded over every visible device (DESIGN.md §13): slot-DP over the
 data axis, per-device FLOP attribution in the energy report.
+
+``--trace-out``/``--metrics-out`` attach the observability subsystem
+(DESIGN.md §16): either flag enables telemetry, the run's lifecycle
+trace lands as Perfetto ``trace_event`` JSON (open at
+https://ui.perfetto.dev), the metrics as Prometheus text exposition, and
+the launcher prints ONE consolidated JSON report — energy, per-request
+attribution (PDP, queue wait, TTFT), and the telemetry snapshot with its
+§16.2 ledger-consistency record — instead of scattered summary lines.
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs.registry import ALL_ARCHS, get_config, get_smoke_config
-from repro.core import energy
 from repro.core.offload import OffloadEngine
 from repro.models import model as model_lib
 from repro.serve.engine import ServeEngine
@@ -42,6 +51,12 @@ def main(argv=None):
                     help="serve sharded over all visible devices "
                          "(DESIGN.md §13; combine with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N on CPU)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the run's Perfetto trace_event JSON here "
+                         "(enables telemetry, DESIGN.md §16)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write Prometheus text exposition here "
+                         "(enables telemetry, DESIGN.md §16)")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -57,8 +72,11 @@ def main(argv=None):
         mesh = make_serve_mesh()
         print(f"serving mesh: {dict(mesh.shape)} over "
               f"{len(jax.devices())} device(s)")
+    telemetry = (obs.Telemetry()
+                 if (args.trace_out or args.metrics_out) else None)
     engine = ServeEngine(cfg, params, max_len=args.max_new + 32,
-                         quant=args.quant, offload=offload, mesh=mesh)
+                         quant=args.quant, offload=offload, mesh=mesh,
+                         telemetry=telemetry)
 
     rng = np.random.default_rng(args.seed)
     if cfg.family == "audio":
@@ -70,6 +88,7 @@ def main(argv=None):
             0, cfg.vocab_size, (args.requests, 8)).astype(np.int32)
         payloads = [prompts[i:i + 1] for i in range(args.requests)]
 
+    attribution = None
     if args.continuous:
         sched = engine.scheduler(n_slots=args.slots,
                                  n_frames=64 if cfg.family == "audio"
@@ -80,7 +99,14 @@ def main(argv=None):
         def on_token(ev):
             streamed[ev.rid] += 1
 
-        got = sched.run(on_token=on_token)
+        # drive the drain manually so attribution() sees the finished
+        # (unclaimed) results — run() would claim them first
+        while sched.n_queued or sched.n_active:
+            sched.admit()
+            for ev in sched.decode_step():
+                on_token(ev)
+        attribution = sched.attribution()
+        got = sched.run(on_token=on_token)             # claims results
         results = [got[r] for r in rids]
         print(f"continuous batching: {args.slots} slots, "
               f"{sum(streamed.values())} tokens streamed, "
@@ -94,19 +120,20 @@ def main(argv=None):
         print(f"req{i}: {r.steps} tokens in {r.total_s:.3f}s "
               f"(prefill {r.prefill_s:.3f}s) pdp={r.pdp_j():.1f}J "
               f"tokens={r.tokens[:8]}...")
-    rep = engine.energy_report(results)
-    print("batch:", {k: round(v, 4) if isinstance(v, float) else v
-                     for k, v in rep.items()})
-    if offload is not None:
-        # ledger totals: plan commits x executed steps, not in-trace
-        # counters — the decode step stays jitted (DESIGN.md §10.2)
-        print(f"offload ledger: {offload.stats.offloaded_calls} offloaded / "
-              f"{offload.stats.fallback_calls} fallback "
-              f"(rate {offload.stats.offload_rate():.2%}, "
-              f"{offload.ledger.commits} plan commits)")
-        print(f"plan cache: {rep['dispatch']['plans']} plans, "
-              f"{rep['dispatch']['plan_hits']} hits / "
-              f"{rep['dispatch']['plan_misses']} misses")
+    # ONE consolidated report (DESIGN.md §16): energy + per-request
+    # attribution (PDP / queue wait / TTFT) + the telemetry snapshot,
+    # instead of the scattered ledger/plan-cache summary lines
+    report = {"energy": engine.energy_report(results)}
+    if attribution is not None:
+        report["attribution"] = attribution
+    if telemetry is not None:
+        report["telemetry"] = telemetry.snapshot()
+        if args.trace_out:
+            print("trace written:", telemetry.write_trace(args.trace_out))
+        if args.metrics_out:
+            print("metrics written:",
+                  telemetry.write_metrics(args.metrics_out))
+    print(json.dumps(report, indent=1, default=str, sort_keys=True))
     return 0
 
 

@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.core import energy
 from repro.core.offload import OffloadEngine
@@ -68,6 +69,12 @@ class GenerationResult:
     prefill_s: float
     decode_s: float
     steps: int
+    # scheduler-path lifecycle timings (DESIGN.md §16.1): wall time spent
+    # queued before admission, and submit -> first streamed token. The
+    # one-shot generate()/transcribe() paths have no queue, so both stay
+    # at their 0.0 defaults there.
+    queue_wait_s: float = 0.0
+    ttft_s: float = 0.0
 
     @property
     def total_s(self) -> float:
@@ -109,6 +116,13 @@ class ServeEngine:
     # shards its slot axis over "data", and every plan key/entry carries
     # the mesh signature. None -> the single-device behavior, unchanged.
     mesh: Optional[Any] = None
+    # nullable observability handle (DESIGN.md §16.2): None (the default)
+    # keeps every instrumentation site a single ``is not None`` test and
+    # allocates no spans; a Telemetry instruments the engine, both
+    # schedulers, and the paged pool, binds the offload ledger for
+    # span-level FLOP attribution, and becomes the process-global handle
+    # the executor's trace-time dispatch counter consults.
+    telemetry: Optional[obs.Telemetry] = None
     _serve_params: Any = field(default=None, repr=False)
     _decode_jit: Any = field(default=None, repr=False)
     _step_traces: int = field(default=0, repr=False)
@@ -206,6 +220,14 @@ class ServeEngine:
         self._prefill_jit = jax.jit(prefill_fn)
         self._plans = PlanCache()
 
+        if self.telemetry is not None:
+            # bind AFTER warm_tuning: warmup plan commits predate the
+            # consistency window, so span-claimed FLOPs start from zero
+            # exactly when the ledger baseline does (DESIGN.md §16.2)
+            if self.offload is not None:
+                self.telemetry.bind_ledger(self.offload.ledger)
+            obs.activate(self.telemetry)
+
     def _argmax(self, logits: jax.Array) -> jax.Array:
         """Greedy pick over the true vocab (vocab_pad columns excluded)."""
         v = self.cfg.vocab_size
@@ -231,6 +253,15 @@ class ServeEngine:
         quant) point are dict hits and never re-trace."""
         if self.offload is None:
             return None
+        tele = self.telemetry
+        if tele is not None and key not in self._plans.plans:
+            # trace the one-time plan-build (a real jax trace); cache hits
+            # skip the span entirely — they are dict lookups
+            with tele.span("plan_build", cat="engine",
+                           args={"key": str(key)}):
+                return self._plans.get_or_build(
+                    key, lambda: record_plan(self.offload, fn, *args,
+                                             key=key))
         return self._plans.get_or_build(
             key, lambda: record_plan(self.offload, fn, *args, key=key))
 
@@ -287,18 +318,24 @@ class ServeEngine:
                                   self._prefill_fn, self._serve_params,
                                   tokens)
         t0 = time.perf_counter()
-        logits, state = self._prefill_jit(self._serve_params, tokens)
-        jax.block_until_ready(logits)
-        first = self._argmax(logits[:, -1])[:, None]
-        prefill_s = time.perf_counter() - t0
+        with obs.maybe_span(self.telemetry, "prefill", cat="engine",
+                            ledger=True, args={"batch": b, "seq": s}):
+            logits, state = self._prefill_jit(self._serve_params, tokens)
+            jax.block_until_ready(logits)
+            first = self._argmax(logits[:, -1])[:, None]
+            prefill_s = time.perf_counter() - t0
+            if self.offload is not None:
+                # the prefill plan records ONE scan-body execution; the
+                # scan runs once per prompt token; committing inside the
+                # ledger span attributes these FLOPs to prefill
+                self.offload.ledger.commit(prefill_plan, times=s)
         step_plan = self._plan(self._key("step", b), self._decode_fn,
                                self._serve_params, first, state)
-        r = self._greedy_loop(state, first, max_new)
-        if self.offload is not None:
-            # the prefill plan records ONE scan-body execution; the scan
-            # runs once per prompt token
-            self.offload.ledger.commit(prefill_plan, times=s)
-            self.offload.ledger.commit(step_plan, times=r["steps"])
+        with obs.maybe_span(self.telemetry, "decode", cat="engine",
+                            ledger=True, args={"batch": b}):
+            r = self._greedy_loop(state, first, max_new)
+            if self.offload is not None:
+                self.offload.ledger.commit(step_plan, times=r["steps"])
         return self._finalize(r, prefill_s)
 
     def transcribe(self, mel: np.ndarray, sot_id: int = 1,
@@ -327,16 +364,21 @@ class ServeEngine:
                                   self._prefill_fn, self._serve_params,
                                   mel_j)
         t0 = time.perf_counter()
-        memory, state = self._prefill_jit(self._serve_params, mel_j)
-        jax.block_until_ready(memory)
-        prefill_s = time.perf_counter() - t0
+        with obs.maybe_span(self.telemetry, "prefill", cat="engine",
+                            ledger=True, args={"batch": b, "frames": f}):
+            memory, state = self._prefill_jit(self._serve_params, mel_j)
+            jax.block_until_ready(memory)
+            prefill_s = time.perf_counter() - t0
+            if self.offload is not None:
+                self.offload.ledger.commit(prefill_plan, times=1)
         first = jnp.full((b, 1), sot_id, jnp.int32)
         step_plan = self._plan(self._key("step", b, f), self._decode_fn,
                                self._serve_params, first, state)
-        r = self._greedy_loop(state, first, max_new)
-        if self.offload is not None:
-            self.offload.ledger.commit(prefill_plan, times=1)
-            self.offload.ledger.commit(step_plan, times=r["steps"])
+        with obs.maybe_span(self.telemetry, "decode", cat="engine",
+                            ledger=True, args={"batch": b}):
+            r = self._greedy_loop(state, first, max_new)
+            if self.offload is not None:
+                self.offload.ledger.commit(step_plan, times=r["steps"])
         return self._finalize(r, prefill_s)
 
     # ------------------------------------------------------------------

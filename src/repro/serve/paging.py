@@ -57,6 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import model as model_lib
 from repro.models.model import ServeState
 from repro.models.whisper import WhisperPagedDecodeState
@@ -351,6 +352,9 @@ class PagedKVPool:
             [None] * n_slots)
         self._shared: Dict[str, List[int]] = {}
         self._dirty = False
+        # nullable telemetry (DESIGN.md §16.2): the owning PagedScheduler
+        # hands down its handle so page-level events (cow_split) record
+        self.telemetry = None
 
     @property
     def plan_geometry(self) -> Tuple[int, int, int, int]:
@@ -421,6 +425,10 @@ class PagedKVPool:
         self._slot_pages[slot][lp] = fresh
         self._bt[slot, lp] = fresh
         self._dirty = True
+        if self.telemetry is not None:
+            self.telemetry.instant("cow_split", slot=slot, lp=lp,
+                                   src=int(page), dst=int(fresh))
+            self.telemetry.inc("repro_cow_splits_total")
         return fresh
 
     def attach_shared(self, slot: int, digest: str) -> None:
@@ -530,6 +538,12 @@ class _PreemptedRequest(_QueuedRequest):
     tokens: List[int] = field(default_factory=list)
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    # lifecycle carry-through (DESIGN.md §16.1): queue wait accumulates
+    # across preemption rounds (requeue_t is the wait base for THIS round;
+    # submit_t stays the original submit for TTFT), TTFT survives as-is
+    queue_wait_s: float = 0.0
+    ttft_s: float = 0.0
+    requeue_t: float = 0.0
 
 
 class PagedScheduler(ContinuousBatchingScheduler):
@@ -562,6 +576,8 @@ class PagedScheduler(ContinuousBatchingScheduler):
                               cross_page_size=cross_page_size,
                               n_cross_pages=n_cross_pages)
         super().__init__(engine, n_slots=n_slots, n_frames=n_frames)
+        self.pool.telemetry = self.telemetry
+        self._kv_gauge_state = None
         self.preemptions = 0
         self.shared_hits = 0
         # padded payloads of in-flight requests, kept for the replay a
@@ -591,6 +607,7 @@ class PagedScheduler(ContinuousBatchingScheduler):
         admitted = []
         eng = self.engine
         pool = self.pool
+        tele = self.telemetry
         while self.queue and pool.n_free:
             req = self.queue[0]
             digest = _mel_digest(req.payload)
@@ -609,35 +626,57 @@ class PagedScheduler(ContinuousBatchingScheduler):
                         f"{pool.cross_alloc.n_free})")
                 break                                  # wait for evictions
             self.queue.popleft()
+            # queue wait accumulates across preemption rounds: a replayed
+            # request's base is its requeue time, not the original submit
+            wait_base = req.requeue_t if replay else req.submit_t
+            queue_wait = (req.queue_wait_s if replay else 0.0) + (
+                time.perf_counter() - wait_base if wait_base else 0.0)
+            if tele is not None:
+                tele.end(req.rid, "queued", wait_s=queue_wait)
+                tele.observe("repro_queue_wait_seconds", queue_wait)
             slot = pool.acquire()
             if shared and not replay:
                 # prefix hit: no encoder, no prefill — attach the shared
                 # cross pages and zero the slot's counters. No ledger
                 # commit either: no GEMM ran, so attributing plan work
-                # here would break the PDP invariant.
+                # here would break the PDP invariant. The ledger span's
+                # zero FLOP delta is the checkable form of that claim.
                 self.shared_hits += 1
-                t0 = time.perf_counter()
-                pool.attach_shared(slot, digest)
-                for _ in range(need_self):
-                    pool.alloc_self_page(slot)
-                pool.attach_reset(slot)
-                prefill_s = time.perf_counter() - t0
-                self._busy_s += prefill_s
+                if tele is not None:
+                    tele.instant("prefix_hit", rid=req.rid)
+                    tele.inc("repro_prefix_hits_total")
+                with obs.maybe_span(tele, "attach", cat="lifecycle",
+                                    track=obs.request_track(req.rid),
+                                    rid=req.rid, ledger=True):
+                    t0 = time.perf_counter()
+                    pool.attach_shared(slot, digest)
+                    for _ in range(need_self):
+                        pool.alloc_self_page(slot)
+                    pool.attach_reset(slot)
+                    prefill_s = time.perf_counter() - t0
+                    self._busy_s += prefill_s
                 first = req.sot_id
                 active = _ActiveSlot(rid=req.rid, max_new=req.max_new,
-                                     prefill_s=prefill_s)
+                                     prefill_s=prefill_s,
+                                     submit_t=req.submit_t,
+                                     queue_wait_s=queue_wait)
             else:
                 payload = jnp.asarray(req.payload)
                 key = eng._key("prefill", 1, self.n_frames)
                 plan = eng._plan(key, eng._prefill_fn, eng._serve_params,
                                  payload)
-                t0 = time.perf_counter()
-                out, state = eng._prefill_jit(eng._serve_params, payload)
-                jax.block_until_ready(out)
-                prefill_s = time.perf_counter() - t0
-                self._busy_s += prefill_s
-                if eng.offload is not None:
-                    eng.offload.ledger.commit(plan, times=1)
+                with obs.maybe_span(tele, "prefill", cat="lifecycle",
+                                    track=obs.request_track(req.rid),
+                                    rid=req.rid, ledger=True):
+                    t0 = time.perf_counter()
+                    out, state = eng._prefill_jit(eng._serve_params, payload)
+                    jax.block_until_ready(out)
+                    prefill_s = time.perf_counter() - t0
+                    self._busy_s += prefill_s
+                    if eng.offload is not None:
+                        eng.offload.ledger.commit(plan, times=1)
+                if tele is not None:
+                    tele.observe("repro_prefill_seconds", prefill_s)
                 if shared:
                     pool.attach_shared(slot, digest)
                 else:
@@ -655,7 +694,12 @@ class PagedScheduler(ContinuousBatchingScheduler):
                     tokens=list(req.tokens) if replay else [],
                     steps=ntok,
                     prefill_s=prefill_s + (req.prefill_s if replay else 0.0),
-                    decode_s=decode_s + (req.decode_s if replay else 0.0))
+                    decode_s=decode_s + (req.decode_s if replay else 0.0),
+                    submit_t=req.submit_t,
+                    queue_wait_s=queue_wait,
+                    ttft_s=req.ttft_s if replay else 0.0)
+            if tele is not None:
+                tele.begin(req.rid, "decode")
             self._tokens = self._tokens.at[slot, 0].set(int(first))
             self._active[slot] = active
             admitted.append(req.rid)
@@ -671,19 +715,28 @@ class PagedScheduler(ContinuousBatchingScheduler):
         replay's wall time and its per-step plan commits land on THIS
         request, keeping PDP attribution exact-by-steps-lived."""
         eng = self.engine
+        tele = self.telemetry
         inputs = [req.sot_id] + req.tokens[:-1]
         tok0 = jnp.full((1, 1), inputs[0], jnp.int32)
         plan = eng._plan(eng._key("step", 1, self.n_frames),
                          eng._decode_fn, eng._serve_params, tok0, state)
-        t0 = time.perf_counter()
-        for t in inputs:
-            _, state = eng._decode_jit(eng._serve_params,
-                                       jnp.full((1, 1), t, jnp.int32), state)
-        state = jax.block_until_ready(state)
-        replay_s = time.perf_counter() - t0
-        self._busy_s += replay_s
-        if eng.offload is not None:
-            eng.offload.ledger.commit(plan, times=len(inputs))
+        with obs.maybe_span(tele, "replay", cat="lifecycle",
+                            track=obs.request_track(req.rid), rid=req.rid,
+                            ledger=True, args={"tokens": len(inputs)}):
+            t0 = time.perf_counter()
+            for t in inputs:
+                _, state = eng._decode_jit(eng._serve_params,
+                                           jnp.full((1, 1), t, jnp.int32),
+                                           state)
+            state = jax.block_until_ready(state)
+            replay_s = time.perf_counter() - t0
+            self._busy_s += replay_s
+            if eng.offload is not None:
+                eng.offload.ledger.commit(plan, times=len(inputs))
+        if tele is not None:
+            tele.instant("replay", rid=req.rid, tokens=len(inputs))
+            tele.inc("repro_replays_total")
+            tele.observe("repro_replay_seconds", replay_s)
         return state, replay_s
 
     # -- pre-step capacity pass (DESIGN.md §15.5) -----------------------
@@ -696,13 +749,21 @@ class PagedScheduler(ContinuousBatchingScheduler):
     def _preempt(self, slot: int) -> None:
         a = self._active.pop(slot)
         self.preemptions += 1
+        tele = self.telemetry
+        if tele is not None:
+            tele.instant("preempt", rid=a.rid)
+            tele.inc("repro_preemptions_total")
+            tele.end(a.rid, "decode", preempted=True, steps=a.steps)
+            tele.begin(a.rid, "queued")
         # FRONT of the queue: a preempted request outranks every waiter
         # (it already holds streamed-token obligations)
         # payload stays in _payloads: the request may be preempted again
         self.queue.appendleft(_PreemptedRequest(
             rid=a.rid, payload=self._payloads[a.rid], max_new=a.max_new,
-            tokens=list(a.tokens), prefill_s=a.prefill_s,
-            decode_s=a.decode_s))
+            submit_t=a.submit_t, tokens=list(a.tokens),
+            prefill_s=a.prefill_s, decode_s=a.decode_s,
+            queue_wait_s=a.queue_wait_s, ttft_s=a.ttft_s,
+            requeue_t=time.perf_counter()))
         self.pool.release(slot)
 
     def submit(self, payload, max_new: int = 32, sot_id: int = 1) -> int:
@@ -740,4 +801,19 @@ class PagedScheduler(ContinuousBatchingScheduler):
         for ev in events:
             if ev.done:                   # finished: replay no longer possible
                 self._payloads.pop(ev.rid, None)
+        tele = self.telemetry
+        if tele is not None:
+            pool = self.pool
+            g = (pool.self_alloc.n_free, pool.cross_alloc.n_free,
+                 pool.self_alloc.n_allocated, pool.cross_alloc.n_allocated,
+                 int(np.count_nonzero(pool.self_alloc.refcount > 1)),
+                 int(np.count_nonzero(pool.cross_alloc.refcount > 1)))
+            if g != self._kv_gauge_state:  # page counts move on admit/
+                self._kv_gauge_state = g   # evict, not every step
+                tele.gauge("repro_kv_pages_free", g[0], kind="self")
+                tele.gauge("repro_kv_pages_free", g[1], kind="cross")
+                tele.gauge("repro_kv_pages_used", g[2], kind="self")
+                tele.gauge("repro_kv_pages_used", g[3], kind="cross")
+                tele.gauge("repro_kv_pages_shared", g[4], kind="self")
+                tele.gauge("repro_kv_pages_shared", g[5], kind="cross")
         return events

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.serve.engine import GenerationResult, ServeEngine
 from repro.serve.kvcache import SlotKVPool
 
@@ -68,6 +69,7 @@ class _QueuedRequest:
     payload: np.ndarray          # (1, F, n_mels) mel | (1, S) i32 prompt
     max_new: int
     sot_id: int = 1
+    submit_t: float = 0.0        # perf_counter at submit: queue-wait base
 
 
 @dataclass
@@ -78,6 +80,10 @@ class _ActiveSlot:
     steps: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    # lifecycle timings (DESIGN.md §16.1), carried into GenerationResult
+    submit_t: float = 0.0
+    queue_wait_s: float = 0.0
+    ttft_s: float = 0.0
 
 
 class ContinuousBatchingScheduler:
@@ -95,6 +101,32 @@ class ContinuousBatchingScheduler:
     def __init__(self, engine: ServeEngine, n_slots: int = 4,
                  n_frames: Optional[int] = None):
         self.engine = engine
+        # the engine's nullable telemetry handle (DESIGN.md §16.2) — every
+        # instrumentation site below is one ``is not None`` test when off
+        self.telemetry = engine.telemetry
+        if self.telemetry is not None:
+            # pre-resolved per-step instruments + a change-gated gauge
+            # cache: decode_step is the hot loop the ≤3% overhead budget
+            # (benchmarks/telemetry_overhead.py) prices, so it must not
+            # pay a registry lookup per metric per step
+            m = self.telemetry.metrics
+            self._step_instruments = (m.counter("repro_tokens_total"),
+                                      m.histogram("repro_step_seconds"),
+                                      m.histogram("repro_token_seconds"))
+            self._step_gauges = (m.gauge("repro_queue_depth"),
+                                 m.gauge("repro_slots_active"),
+                                 m.gauge("repro_step_traces"),
+                                 m.gauge("repro_kv_utilization"))
+            self._gauge_state = None
+            # per-step metric observations buffer in plain lists/ints on
+            # the hot path and drain into the registry off it (run()/
+            # attribution()/flush_telemetry) — registry calls are ~1-2 µs
+            # each cold, and a decode step makes several (DESIGN.md §16.4)
+            self._buf_steps: List[float] = []
+            self._buf_shares: List[float] = []
+            self._buf_ttft: List[float] = []
+            self._buf_tokens = 0
+            self._buf_finished = 0
         self.n_slots = n_slots
         cfg = engine.cfg
         self._audio = cfg.family == "audio"
@@ -134,6 +166,7 @@ class ContinuousBatchingScheduler:
         # the serving benchmarks report kv_utilization = used_peak/committed
         self.kv_used_peak = 0
         self.active_peak = 0
+        self._kv_committed: Optional[int] = None
 
     def _make_pool(self):
         """Pool factory — the paged scheduler (serve/paging.py,
@@ -147,7 +180,12 @@ class ContinuousBatchingScheduler:
     # -- KV accounting (DESIGN.md §15.4) --------------------------------
     @property
     def kv_committed_bytes(self) -> int:
-        return self.pool.committed_kv_bytes()
+        # cached: the pool's committed state is fixed-shape buffers
+        # allocated at construction, but measuring it walks the whole
+        # state pytree — far too slow for the per-step gauge update
+        if self._kv_committed is None:
+            self._kv_committed = self.pool.committed_kv_bytes()
+        return self._kv_committed
 
     @property
     def kv_utilization_peak(self) -> float:
@@ -212,7 +250,14 @@ class ContinuousBatchingScheduler:
             self.finished[rid] = GenerationResult(tokens=[], prefill_s=0.0,
                                                   decode_s=0.0, steps=0)
             return rid
-        self.queue.append(_QueuedRequest(rid, arr, max_new, sot_id))
+        self.queue.append(_QueuedRequest(rid, arr, max_new, sot_id,
+                                         submit_t=time.perf_counter()))
+        tele = self.telemetry
+        if tele is not None:
+            tele.instant("submit", rid=rid)
+            tele.begin(rid, "queued")
+            tele.inc("repro_requests_submitted_total")
+            tele.gauge("repro_queue_depth", len(self.queue))
         return rid
 
     # -- admission ------------------------------------------------------
@@ -222,8 +267,14 @@ class ContinuousBatchingScheduler:
         admitted request ids."""
         admitted = []
         eng = self.engine
+        tele = self.telemetry
         while self.queue and self.pool.n_free:
             req = self.queue.popleft()
+            queue_wait = (time.perf_counter() - req.submit_t
+                          if req.submit_t else 0.0)
+            if tele is not None:
+                tele.end(req.rid, "queued", wait_s=queue_wait)
+                tele.observe("repro_queue_wait_seconds", queue_wait)
             payload = jnp.asarray(req.payload)
             if self._audio:
                 key = eng._key("prefill", 1, self.n_frames)
@@ -232,22 +283,32 @@ class ContinuousBatchingScheduler:
                 key = eng._key("prefill", 1, payload.shape[1])
                 times = payload.shape[1]
             plan = eng._plan(key, eng._prefill_fn, eng._serve_params, payload)
-            t0 = time.perf_counter()
-            out, state = eng._prefill_jit(eng._serve_params, payload)
-            jax.block_until_ready(out)
-            if self._audio:
-                first = np.full((1,), req.sot_id, np.int32)
-            else:
-                first = np.asarray(eng._argmax(out[:, -1]))
-            prefill_s = time.perf_counter() - t0
-            self._busy_s += prefill_s
-            if eng.offload is not None:
-                eng.offload.ledger.commit(plan, times=times)
+            # the ledger span tightly scopes this request's prefill exec +
+            # commit, so its FLOP delta IS the prefill's attribution
+            with obs.maybe_span(tele, "prefill", cat="lifecycle",
+                                track=obs.request_track(req.rid),
+                                rid=req.rid, ledger=True):
+                t0 = time.perf_counter()
+                out, state = eng._prefill_jit(eng._serve_params, payload)
+                jax.block_until_ready(out)
+                if self._audio:
+                    first = np.full((1,), req.sot_id, np.int32)
+                else:
+                    first = np.asarray(eng._argmax(out[:, -1]))
+                prefill_s = time.perf_counter() - t0
+                self._busy_s += prefill_s
+                if eng.offload is not None:
+                    eng.offload.ledger.commit(plan, times=times)
             slot = self.pool.acquire()
             self.pool.insert(slot, state)
             self._tokens = self._tokens.at[slot, 0].set(int(first[0]))
             self._active[slot] = _ActiveSlot(rid=req.rid, max_new=req.max_new,
-                                             prefill_s=prefill_s)
+                                             prefill_s=prefill_s,
+                                             submit_t=req.submit_t,
+                                             queue_wait_s=queue_wait)
+            if tele is not None:
+                tele.observe("repro_prefill_seconds", prefill_s)
+                tele.begin(req.rid, "decode")
             admitted.append(req.rid)
         return admitted
 
@@ -273,6 +334,13 @@ class ContinuousBatchingScheduler:
         self._ensure_step_plan()
         self._note_kv_usage()
         eng = self.engine
+        tele = self.telemetry
+        # the batch step's ledger span scopes exec + host sync + the one
+        # plan commit — its FLOP delta is the step's exact attribution.
+        # ledger_open/close, not the with-form: this step is what the
+        # ≤3% budget prices, and the pair is 3 Python frames lighter
+        if tele is not None:
+            h = tele.ledger_open()
         t0 = time.perf_counter()
         nxt, _, state = eng._step_jit(eng._serve_params, self._tokens,
                                       self._done0, self.pool.state)
@@ -283,7 +351,11 @@ class ContinuousBatchingScheduler:
         self._busy_s += dt
         if eng.offload is not None:
             eng.offload.ledger.commit(self._step_plan, times=1)
+        if tele is not None:
+            tele.ledger_close(h, "decode_step", cat="step",
+                              args={"active": len(self._active)})
         share = dt / len(self._active)
+        now = time.perf_counter()
         eos = eng.eos_id
         events = []
         for slot in sorted(self._active):
@@ -292,18 +364,73 @@ class ContinuousBatchingScheduler:
             a.tokens.append(tok)
             a.steps += 1
             a.decode_s += share
+            if a.steps == 1 and a.ttft_s == 0.0 and a.submit_t > 0.0:
+                # first generated token of this request: TTFT is wall time
+                # from submit, inclusive of queue wait and prefill
+                a.ttft_s = now - a.submit_t
+                if tele is not None:
+                    self._buf_ttft.append(a.ttft_s)
             done = a.steps >= a.max_new or (eos is not None and tok == eos)
             events.append(TokenEvent(a.rid, tok, a.steps, done))
             if done:
                 self.finished[a.rid] = GenerationResult(
                     tokens=a.tokens, prefill_s=a.prefill_s,
-                    decode_s=a.decode_s, steps=a.steps)
+                    decode_s=a.decode_s, steps=a.steps,
+                    queue_wait_s=a.queue_wait_s, ttft_s=a.ttft_s)
+                if tele is not None:
+                    tele.instant("evict", rid=a.rid)
+                    tele.end(a.rid, "decode", steps=a.steps)
+                    self._buf_finished += 1
                 del self._active[slot]
                 # reset=False: insert() fully overwrites the slot on the
                 # next admission and freed rows' garbage is never read —
                 # skipping the reset saves a pool-state copy per eviction
                 self.pool.release(slot, reset=False)
+        if tele is not None:
+            self._buf_tokens += len(events)
+            self._buf_steps.append(dt)
+            self._buf_shares.append(share)
+            # change-gate on the plain-int peak, not the utilization
+            # property — the ratio's denominator walks the state pytree
+            g = (len(self.queue), len(self._active), eng._step_traces,
+                 self.kv_used_peak)
+            if g != self._gauge_state:      # gauges move rarely mid-drain
+                self._gauge_state = g
+                gq, gs, gt, gu = self._step_gauges
+                gq.set(g[0])
+                gs.set(g[1])
+                gt.set(g[2])
+                gu.set(self.kv_utilization_peak)
         return events
+
+    # -- telemetry flush -------------------------------------------------
+    def flush_telemetry(self) -> None:
+        """Drain the buffered per-step metric observations into the
+        registry (DESIGN.md §16.4). The hot path appends to plain lists
+        and bumps plain ints; the registry work (label resolution, bucket
+        search) happens here, off the per-token latency path. Called by
+        ``run()`` and ``attribution()``; drive it yourself after a manual
+        ``admit()``/``decode_step()`` loop before reading metrics."""
+        tele = self.telemetry
+        if tele is None:
+            return
+        ctok, hstep, htok = self._step_instruments
+        if self._buf_tokens:
+            ctok.inc(self._buf_tokens)
+            self._buf_tokens = 0
+        for v in self._buf_steps:
+            hstep.observe(v)
+        self._buf_steps.clear()
+        for v in self._buf_shares:
+            htok.observe(v)
+        self._buf_shares.clear()
+        for v in self._buf_ttft:
+            tele.observe("repro_ttft_seconds", v)
+        self._buf_ttft.clear()
+        if self._buf_finished:
+            tele.inc("repro_requests_finished_total", self._buf_finished)
+            tele.inc("repro_evictions_total", self._buf_finished)
+            self._buf_finished = 0
 
     # -- drain ----------------------------------------------------------
     def run(self, on_token: Optional[Callable[[TokenEvent], Any]] = None
@@ -322,6 +449,7 @@ class ContinuousBatchingScheduler:
         out = dict(self.finished)
         self.finished.clear()
         self._claimed_s += sum(r.total_s for r in out.values())
+        self.flush_telemetry()
         return out
 
     # -- attribution (DESIGN.md §11.3) ----------------------------------
@@ -339,10 +467,18 @@ class ContinuousBatchingScheduler:
         out by run() is subtracted, so the invariant holds per claim
         window in a long-running serve loop."""
         from repro.core import energy
+        self.flush_telemetry()
         w = energy.TPU_V5E_W if power_w is None else power_w
         per_req = {rid: r.pdp_j(w) for rid, r in self.finished.items()}
         window_s = self._busy_s - self._claimed_s
         return {"per_request_pdp_j": per_req,
+                # lifecycle timings (DESIGN.md §16.1): wall queue wait and
+                # submit->first-token per unclaimed finished request, so
+                # launch/serve.py prints ONE consolidated report
+                "per_request_queue_wait_s": {
+                    rid: r.queue_wait_s for rid, r in self.finished.items()},
+                "per_request_ttft_s": {
+                    rid: r.ttft_s for rid, r in self.finished.items()},
                 "batch_pdp_j": energy.pdp(window_s, w),
                 "busy_s": window_s,
                 "drained": not (self._active or self.queue)}

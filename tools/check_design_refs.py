@@ -10,10 +10,10 @@ reverse   every top-level ``## §N`` section of DESIGN.md must be cited at
           least once from the scanned tree — a section nothing points at
           is drift in the other direction (stale design text, or code
           that silently stopped honoring it).
-docstring every module under src/repro/serve/ and src/repro/backends/
-          must open with a module docstring citing its DESIGN.md section
-          (the serving/backend layers are where the design doc and the
-          code co-evolve fastest).
+docstring every module under src/repro/serve/, src/repro/backends/, and
+          src/repro/obs/ must open with a module docstring citing its
+          DESIGN.md section (the serving/backend/observability layers
+          are where the design doc and the code co-evolve fastest).
 
 Run from the repo root:
 
@@ -35,7 +35,8 @@ TOP_HEADING_RE = re.compile(r"^##\s+§([0-9]+)\b", re.M)
 SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
 SCAN_EXTS = (".py", ".md")
 DOCSTRING_DIRS = (os.path.join("src", "repro", "serve"),
-                  os.path.join("src", "repro", "backends"))
+                  os.path.join("src", "repro", "backends"),
+                  os.path.join("src", "repro", "obs"))
 
 
 def collect_refs(root: str):

@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""Perfetto trace validator (CI): structural checks on the trace_event
+JSON that ``repro.obs.export`` emits (DESIGN.md §16.4).
+
+Checks, per file:
+
+  - top level is an object with a ``traceEvents`` list
+  - every event has ``ph`` in {X, i, M, B, E} and integer-valued
+    ``ts``/``pid``/``tid`` (metadata ``M`` events are exempt from ts)
+  - complete events (``X``) carry ``dur >= 0`` and ``ts >= 0``
+  - non-metadata events are in non-decreasing ``ts`` order (the exporter
+    sorts; an unsorted trace means a clock or merge bug)
+  - duration events balance per (pid, tid): every ``E`` matches an open
+    ``B``, and leftover ``B`` events are reported — an unclosed lifecycle
+    phase is exactly the leak the §16.2 closure invariant forbids
+
+Run from the repo root:
+
+  python tools/check_trace.py PATH [PATH ...]
+
+Exit code 0 when every file validates; 1 otherwise (CI gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List
+
+VALID_PH = {"X", "i", "M", "B", "E"}
+
+
+def validate(obj: Any) -> List[str]:
+    """Return a list of human-readable problems (empty == valid)."""
+    errors: List[str] = []
+    if not isinstance(obj, dict) or "traceEvents" not in obj:
+        return ["top level must be an object with a 'traceEvents' list"]
+    events = obj["traceEvents"]
+    if not isinstance(events, list):
+        return ["'traceEvents' must be a list"]
+    last_ts = None
+    open_b: Dict[tuple, int] = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event[{i}]: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in VALID_PH:
+            errors.append(f"event[{i}]: unknown ph {ph!r}")
+            continue
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            errors.append(f"event[{i}] ({ev.get('name')}): bad ts {ts!r}")
+            continue
+        if last_ts is not None and ts < last_ts:
+            errors.append(f"event[{i}] ({ev.get('name')}): ts {ts} < "
+                          f"previous {last_ts} (trace not sorted)")
+        last_ts = ts
+        key = (ev.get("pid"), ev.get("tid"))
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"event[{i}] ({ev.get('name')}): "
+                              f"bad dur {dur!r}")
+        elif ph == "B":
+            open_b[key] = open_b.get(key, 0) + 1
+        elif ph == "E":
+            if open_b.get(key, 0) <= 0:
+                errors.append(f"event[{i}]: 'E' with no open 'B' on "
+                              f"track {key}")
+            else:
+                open_b[key] -= 1
+    for key, n in sorted(open_b.items(), key=str):
+        if n:
+            errors.append(f"track {key}: {n} unclosed 'B' event(s) — "
+                          "open lifecycle phase leaked (§16.2 closure)")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+", help="trace_event JSON files")
+    args = ap.parse_args(argv)
+    bad = 0
+    for path in args.paths:
+        try:
+            with open(path) as f:
+                obj = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"{path}: unreadable ({e})")
+            bad += 1
+            continue
+        errors = validate(obj)
+        if errors:
+            bad += 1
+            print(f"{path}: INVALID")
+            for e in errors:
+                print(f"  - {e}")
+        else:
+            n = len(obj["traceEvents"])
+            print(f"{path}: ok ({n} events)")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
