@@ -54,6 +54,8 @@ BENCHMARK_INDEX = [
      "paged vs contiguous KV serving (parity + requests-per-GB)"),
     ("telemetry_overhead", "DESIGN.md §16",
      "telemetry on/off lockstep drain (≤3% step overhead + §16.2 exactness)"),
+    ("speculative", "§5.1 E2E / DESIGN.md §17",
+     "tiny-draft speculative decode vs plain greedy (token parity + >1.5x)"),
 ]
 
 

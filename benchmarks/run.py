@@ -14,7 +14,8 @@ from benchmarks import (
     backend_matrix, burst_sweep, calibration_error, continuous_batching,
     coverage_cdf, decode_throughput, exec_breakdown, lmm_latency, lmm_power,
     multi_utterance, paged_serving, pdp_cross_platform, profile_shares,
-    q8_reconstruction, sharded_serving, telemetry_overhead, tune_sweep)
+    q8_reconstruction, sharded_serving, speculative, telemetry_overhead,
+    tune_sweep)
 
 SUITES = [
     ("q8_reconstruction (§4.2)", q8_reconstruction.run, False),
@@ -37,6 +38,7 @@ SUITES = [
     ("sharded_serving (§5.1 / DESIGN.md §13)", sharded_serving.run, True),
     ("paged_serving (§5.1 / DESIGN.md §15)", paged_serving.run, True),
     ("telemetry_overhead (DESIGN.md §16)", telemetry_overhead.run, True),
+    ("speculative (§5.1 / DESIGN.md §17)", speculative.run, True),
 ]
 
 

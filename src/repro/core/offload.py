@@ -58,6 +58,13 @@ class OffloadStats:
     # keeps PDP accounting exact under sharding (gated by
     # benchmarks/sharded_serving.py).
     by_device: Dict[str, int] = field(default_factory=dict)
+    # per-role FLOP attribution for multi-model engines (DESIGN.md §17.2):
+    # a speculative engine's draft and verifier commit into ONE ledger,
+    # tagged "draft"/"verify"; single-model commits (and eager calls)
+    # default to "main". Invariant, same shape as by_device:
+    # sum(by_role) == offloaded + fallback + residual flops — gated by
+    # benchmarks/speculative.py next to the §16.2 span exactness.
+    by_role: Dict[str, int] = field(default_factory=dict)
 
     def offload_rate(self) -> float:
         t = self.offloaded_calls + self.fallback_calls
@@ -79,7 +86,8 @@ class OffloadLedger:
     totals: OffloadStats = field(default_factory=OffloadStats)
     commits: int = 0            # plans committed (not executions)
 
-    def account(self, entry: PlanEntry, times: int = 1) -> None:
+    def account(self, entry: PlanEntry, times: int = 1,
+                role: str = "main") -> None:
         s = self.totals
         if entry.offload:
             s.offloaded_calls += times
@@ -104,13 +112,20 @@ class OffloadLedger:
             dev = f"dev{i}"
             s.by_device[dev] = (s.by_device.get(dev, 0) + share
                                 + (rem if i == 0 else 0))
+        # per-role split (DESIGN.md §17.2): whole-linear flops, so
+        # sum(by_role) stays equal to the flop totals like by_device
+        s.by_role[role] = s.by_role.get(role, 0) + entry.flops * times
 
-    def commit(self, plan: Optional[DispatchPlan], times: int = 1) -> None:
-        """Account ``times`` executions of a traced program's plan."""
+    def commit(self, plan: Optional[DispatchPlan], times: int = 1,
+               role: str = "main") -> None:
+        """Account ``times`` executions of a traced program's plan.
+        ``role`` tags the commit for multi-model attribution
+        (DESIGN.md §17.2) — "draft"/"verify" from a speculative engine,
+        "main" everywhere else."""
         if plan is None or times <= 0:
             return
         for entry in plan:
-            self.account(entry, times)
+            self.account(entry, times, role=role)
         self.commits += 1
 
 

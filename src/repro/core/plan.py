@@ -179,8 +179,9 @@ class DispatchPlan:
 
 def plan_key(phase: str, quant: Optional[str], batch: int,
              *extra: Hashable, mesh=None,
-             pages: Optional[Tuple[Hashable, ...]] = None
-             ) -> Tuple[Hashable, ...]:
+             pages: Optional[Tuple[Hashable, ...]] = None,
+             role: Optional[str] = None,
+             k: Optional[int] = None) -> Tuple[Hashable, ...]:
     """Canonical plan-cache key: ``(phase, quant, batch, *extra)``.
 
     One key family serves both serving modes (DESIGN.md §11.3): a
@@ -202,13 +203,26 @@ def plan_key(phase: str, quant: Optional[str], batch: int,
     decode step gathers its KV through block tables — a different traced
     program from the contiguous step at the same (batch, frames) — so
     paged and contiguous programs must never share a ``PlanCache`` entry.
-    ``pages=None`` leaves contiguous keys byte-identical."""
+    ``pages=None`` leaves contiguous keys byte-identical.
+
+    ``role``/``k`` append the speculative-decoding identity
+    (DESIGN.md §17.2): a two-model engine runs a *draft* program and a
+    *verify* program whose ``k``-position window makes it a different
+    traced program (m = B·(k+1) per linear) from the plain step at the
+    same batch — draft, verify and greedy plans must never share a
+    ``PlanCache`` entry, and the role tag is what the ledger's
+    per-role FLOP attribution keys commits by. ``role=None``/``k=None``
+    leave single-model keys byte-identical."""
     base = (phase, quant, batch, *extra)
     sig = mesh_signature(mesh) if hasattr(mesh, "axis_names") else mesh
     if sig is not None:
         base = (*base, ("mesh", sig))
     if pages is not None:
         base = (*base, ("pages", tuple(pages)))
+    if role is not None:
+        base = (*base, ("role", role))
+    if k is not None:
+        base = (*base, ("k", k))
     return base
 
 

@@ -11,6 +11,12 @@ tokens, and exact per-request ledger/PDP attribution. ``--mesh`` serves
 sharded over every visible device (DESIGN.md §13): slot-DP over the
 data axis, per-device FLOP attribution in the energy report.
 
+``--speculative`` serves the batch through a two-model speculative
+engine (DESIGN.md §17): a cheap draft arch (``--draft``, default
+whisper-tiny) proposes ``-k`` tokens per round, the main arch verifies
+the window in one forward, and the consolidated report gains the
+acceptance rate plus the draft/verify PDP split from the shared ledger.
+
 ``--trace-out``/``--metrics-out`` attach the observability subsystem
 (DESIGN.md §16): either flag enables telemetry, the run's lifecycle
 trace lands as Perfetto ``trace_event`` JSON (open at
@@ -51,6 +57,14 @@ def main(argv=None):
                     help="serve sharded over all visible devices "
                          "(DESIGN.md §13; combine with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N on CPU)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="speculative decoding (DESIGN.md §17): draft with "
+                         "a cheap ladder model, verify with --arch")
+    ap.add_argument("--draft", default="whisper-tiny",
+                    choices=sorted(ALL_ARCHS),
+                    help="draft arch for --speculative")
+    ap.add_argument("-k", type=int, default=6,
+                    help="draft window size for --speculative")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the run's Perfetto trace_event JSON here "
                          "(enables telemetry, DESIGN.md §16)")
@@ -60,6 +74,11 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.speculative and args.continuous:
+        ap.error("--speculative uses its own wave batching "
+                 "(DESIGN.md §17.4); drop --continuous")
+    if args.speculative and args.mesh:
+        ap.error("--speculative over a sharded mesh is not supported yet")
 
     cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
     params = model_lib.init_params(jax.random.PRNGKey(args.seed), cfg,
@@ -111,6 +130,20 @@ def main(argv=None):
         print(f"continuous batching: {args.slots} slots, "
               f"{sum(streamed.values())} tokens streamed, "
               f"{sched.step_traces} step trace(s)")
+    elif args.speculative:
+        if cfg.family != "audio":
+            ap.error("--speculative serves the Whisper ladder "
+                     "(audio archs, DESIGN.md §17)")
+        dcfg = (get_config(args.draft) if args.full
+                else get_smoke_config(args.draft))
+        dparams = model_lib.init_params(jax.random.PRNGKey(args.seed + 1),
+                                        dcfg, max_positions=512)
+        spec = engine.speculative(dcfg, dparams, k=args.k)
+        results = spec.transcribe(mel, max_new=args.max_new)
+        print(f"speculative: draft={args.draft} k={args.k} "
+              f"acceptance={spec.acceptance_rate():.2f} "
+              f"rounds={spec.rounds} "
+              f"verify_traces={spec.stats()['verify_traces']}")
     elif cfg.family == "audio":
         results = engine.transcribe(mel, max_new=args.max_new)
     else:
@@ -126,6 +159,11 @@ def main(argv=None):
     report = {"energy": engine.energy_report(results)}
     if attribution is not None:
         report["attribution"] = attribution
+    if args.speculative:
+        # acceptance + the draft/verify FLOP split (DESIGN.md §17.3);
+        # energy_report's dispatch.by_role carries the same split scaled
+        # into the PDP attribution when --offload is on
+        report["speculative"] = spec.stats()
     if telemetry is not None:
         report["telemetry"] = telemetry.snapshot()
         if args.trace_out:

@@ -344,10 +344,13 @@ def dequantize_kv(qs: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
 
 def _cache_update(buf: jax.Array, val: jax.Array,
                   length: jax.Array) -> jax.Array:
-    """Write one new entry per row at that row's position. ``length``
-    scalar: every row writes at the same index (lockstep batch).
-    ``length`` (B,): per-row write positions — the slot-pool layout
-    (DESIGN.md §11.1), vmapped so each slot advances independently."""
+    """Write ``val``'s entries per row starting at that row's position.
+    ``length`` scalar: every row writes at the same index (lockstep
+    batch). ``length`` (B,): per-row write positions — the slot-pool
+    layout (DESIGN.md §11.1), vmapped so each slot advances
+    independently. ``val`` may carry W > 1 new positions (the verify
+    window, DESIGN.md §17.1) — dynamic_update_slice writes all W
+    contiguously from the row's position."""
     val = val.astype(buf.dtype)
     if length.ndim == 0:
         return jax.lax.dynamic_update_slice_in_dim(buf, val, length, axis=1)
@@ -360,7 +363,12 @@ def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array,
                      cache: KVCache, *,
                      memory_kv: Optional[tuple] = None,
                      engine=None):
-    """One decode step. x: (B, 1, d). Returns (out, new_cache).
+    """One decode step over a W-token window. x: (B, W, d) — W=1 is the
+    plain autoregressive step; W=k+1 is the speculative verify window
+    (DESIGN.md §17.1), which appends all W new KV entries contiguously
+    and masks so query j sees exactly positions <= length + j (window
+    causality falls out of the same validity test). Returns
+    (out, new_cache) with ``length`` advanced by W.
 
     memory_kv: precomputed (k, v) encoder projections for cross-attention
     (whisper's dec.cross.kv — computed once per utterance, paper §3 Fig 1).
@@ -369,7 +377,7 @@ def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array,
     (slot-pool layout, DESIGN.md §11.1); each row then reads/writes its
     own position so slots at different decode depths share one batch.
     """
-    b = x.shape[0]
+    b, w = x.shape[0], x.shape[1]
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = _split_heads(layers.linear(p["q"], x, engine, "dec.attn.q"), hq)
 
@@ -377,12 +385,18 @@ def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array,
         knew = _split_heads(layers.linear(p["k"], x, engine, "dec.attn.k"), hkv)
         vnew = _split_heads(layers.linear(p["v"], x, engine, "dec.attn.v"), hkv)
         per_row = cache.length.ndim == 1
+        offs = jnp.arange(w)
         if cfg.pos_embedding == "rope":
-            pos = (cache.length[:, None] if per_row
-                   else cache.length[None, None])
+            pos = (cache.length[:, None] + offs[None, :] if per_row
+                   else (cache.length + offs)[None, :])
             q = layers.apply_rope(q, pos, cfg.rope_theta)
             knew = layers.apply_rope(knew, pos, cfg.rope_theta)
         if isinstance(cache, PagedKVCache):
+            if w != 1:
+                raise NotImplementedError(
+                    "paged KV decode writes one entry per step; the "
+                    "W-position verify window (DESIGN.md §17.1) is "
+                    "contiguous-layout only")
             # paged write (DESIGN.md §15.2): each row scatters its new
             # entry into (physical page of its current logical page,
             # in-page offset). Free slots' table rows point at trash page
@@ -399,7 +413,7 @@ def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array,
             v_pages = cache.v_pages.at[phys, off].set(
                 vnew[:, 0].astype(cache.v_pages.dtype))
             new_cache = PagedKVCache(k_pages, v_pages, cache.block_table,
-                                     cache.length + 1)
+                                     cache.length + w)
             # paged read: gather each row's pages into its contiguous
             # (n_log*page,) view — token t sits at gathered position t, so
             # the per-row valid mask below is identical to the contiguous
@@ -414,16 +428,21 @@ def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array,
             upd = lambda buf, val: _cache_update(buf, val, cache.length)
             new_cache = QKVCache(upd(cache.k_qs, kq), upd(cache.v_qs, vq),
                                  upd(cache.k_scale, ks),
-                                 upd(cache.v_scale, vs), cache.length + 1)
+                                 upd(cache.v_scale, vs), cache.length + w)
             k = dequantize_kv(new_cache.k_qs, new_cache.k_scale, x.dtype)
             v = dequantize_kv(new_cache.v_qs, new_cache.v_scale, x.dtype)
         else:
             k = _cache_update(cache.k, knew, cache.length)
             v = _cache_update(cache.v, vnew, cache.length)
-            new_cache = KVCache(k, v, cache.length + 1)
+            new_cache = KVCache(k, v, cache.length + w)
+        # per-query validity: query j attends key position s iff
+        # s <= length + j — its own new entry is visible, later window
+        # entries are not (window causality, DESIGN.md §17.1)
         pos_idx = jnp.arange(k.shape[1])
-        valid = (pos_idx[None, :] <= cache.length[:, None] if per_row
-                 else pos_idx <= cache.length)
+        qpos = (cache.length[:, None] + offs[None, :] if per_row
+                else (cache.length + offs))          # (B, W) | (W,)
+        valid = (pos_idx[None, None, :] <= qpos[:, :, None] if per_row
+                 else pos_idx[None, :] <= qpos[:, None])   # (B,W,S) | (W,S)
     else:
         k, v = memory_kv
         new_cache = cache
@@ -442,17 +461,18 @@ def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array,
     batch_ok = mesh is not None and b % ctx.batch_shard_size(mesh) == 0
     s_tok = None if kv_sharded else ("model" if batch_ok else "seq")
     g = hq // hkv
-    qg = q.reshape(b, 1, hkv, g, hd)
+    qg = q.reshape(b, w, hkv, g, hd)
     logits = jnp.einsum("bqhgd,bshd->bhgqs", qg, k,
                         preferred_element_type=jnp.float32) * hd ** -0.5
     logits = ctx.constrain(logits, "batch", "model" if kv_sharded else None,
                            None, None, s_tok)
     if valid is not None:
-        vmask = (valid[:, None, None, None, :] if valid.ndim == 2
-                 else valid[None, None, None, None, :])
+        # (B,W,S) per-row / (W,S) lockstep -> broadcast over (h, g)
+        vmask = (valid[:, None, None, :, :] if valid.ndim == 3
+                 else valid[None, None, None, :, :])
         logits = jnp.where(vmask, logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgqs,bshd->bqhgd", probs.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
-    out = out.astype(x.dtype).reshape(b, 1, hq * hd)
+    out = out.astype(x.dtype).reshape(b, w, hq * hd)
     return layers.linear(p["o"], out, engine, "dec.attn.o"), new_cache

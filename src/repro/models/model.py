@@ -295,6 +295,52 @@ def serve_step(params: dict, cfg: ModelConfig, token: jax.Array,
     return logits, ServeState(st, state.step + 1)
 
 
+def verify_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                state: ServeState, *, engine=None
+                ) -> Tuple[jax.Array, ServeState]:
+    """Score a W-token verify window in one forward (DESIGN.md §17.1):
+    tokens (B, W) i32 -> (logits (B, W, V), state') with every cache
+    length (and ``step``) advanced by W. ``logits[:, j]`` equals what
+    ``serve_step`` would emit after feeding ``tokens[:, :j+1]`` one at a
+    time — the token-exactness contract speculative acceptance relies
+    on. Audio (whisper) only for now: the draft/verify ladder is the
+    Whisper scaling study's regime (tiny drafts, base/small verifies)."""
+    if cfg.family != "audio":
+        raise NotImplementedError(
+            "speculative verify windows are wired for the audio family "
+            "(the Whisper ladder); LM families still serve_step one token")
+    logits, st = whisper.verify_step(params, cfg, tokens,
+                                     state.layer_states, engine=engine)
+    return logits, ServeState(st, state.step + tokens.shape[1])
+
+
+def set_slot_lengths(state: ServeState, new_len: jax.Array) -> ServeState:
+    """Splice per-slot decode positions to ``new_len`` (B,) — the
+    speculative rollback (DESIGN.md §17.1): after a verify window
+    advanced every length by W, the accepted prefix keeps only
+    ``1 + accept_len`` of those tokens, so the counters rewind while the
+    over-written KV entries beyond ``new_len`` stay in place (masked by
+    the validity test, then overwritten by the next window).
+
+    Structural rule, the inverse discipline of ``slot_layout``: in the
+    slot layout the counters are exactly the ``ndim <= 2`` leaves —
+    ``step`` (B,) and layer-stacked lengths (R, B) — and every data leaf
+    is ``ndim >= 3``, so counters broadcast-assign from ``new_len`` and
+    data passes through untouched."""
+    new_len = jnp.asarray(new_len, jnp.int32)
+
+    def conv(a):
+        if a.ndim == 1:                       # (B,) unstacked counter
+            return jnp.broadcast_to(new_len, a.shape)
+        if a.ndim == 2:                       # (R, B) layer-stacked counter
+            return jnp.broadcast_to(new_len[None, :], a.shape)
+        return a
+
+    return ServeState(
+        layer_states=jax.tree_util.tree_map(conv, state.layer_states),
+        step=jnp.broadcast_to(new_len, state.step.shape))
+
+
 def prefill(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
             state: ServeState, *, engine=None, attn_chunk: int = 2048
             ) -> Tuple[jax.Array, ServeState]:

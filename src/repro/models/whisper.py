@@ -279,28 +279,13 @@ def _decode_step_paged(params: dict, cfg: ModelConfig, token: jax.Array,
         block_table=bt, cross_table=ct, length=nl)
 
 
-def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
-                state: WhisperDecodeState, *, engine=None
-                ) -> Tuple[jax.Array, WhisperDecodeState]:
-    """token: (B, 1) int32 -> (logits (B, 1, V), state').
-
-    Positions come from the layer-0 self-KV length: scalar for a lockstep
-    batch, per-row ``(B,)`` in the slot-pool layout (DESIGN.md §11.1) —
-    each slot then reads its own learned positional embedding row.
-    ``WhisperPagedDecodeState`` dispatches to the paged twin
-    (DESIGN.md §15.2)."""
-    if isinstance(state, WhisperPagedDecodeState):
-        return _decode_step_paged(params, cfg, token, state, engine=engine)
-    x = layers.embed(params["embed"], token)
-    pos = (state.self_kv.length[0] if state.self_kv.length.ndim
-           else state.self_kv.length)
-    table = params["dec_pos"]["table"]
-    if pos.ndim:                                    # per-slot positions (B,)
-        x = x + jnp.take(table, pos, axis=0)[:, None].astype(x.dtype)
-    else:
-        x = x + jax.lax.dynamic_slice_in_dim(table, pos, 1,
-                                             axis=0).astype(x.dtype)
-
+def _decoder_stack(params: dict, cfg: ModelConfig, x: jax.Array,
+                   state: WhisperDecodeState, *, engine=None
+                   ) -> Tuple[jax.Array, WhisperDecodeState]:
+    """Shared decoder-block stack for the one-token step and the W-token
+    verify window (DESIGN.md §17.1): x is (B, W, d) embedded+positioned
+    input; ``decode_attention`` appends all W self-KV entries and masks
+    window causality, so W=1 reproduces the old step bit-for-bit."""
     def body(x, xs):
         p, kv, ck, cv = xs
         h = layers.norm_apply(p["norm1"], x, cfg.norm)
@@ -330,3 +315,56 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
     x = layers.norm_apply(params["dec_norm"], x, cfg.norm)
     logits = layers.unembed(params["embed"], x, engine)
     return logits, WhisperDecodeState(self_kv=new_kv, cross_kv=state.cross_kv)
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
+                state: WhisperDecodeState, *, engine=None
+                ) -> Tuple[jax.Array, WhisperDecodeState]:
+    """token: (B, 1) int32 -> (logits (B, 1, V), state').
+
+    Positions come from the layer-0 self-KV length: scalar for a lockstep
+    batch, per-row ``(B,)`` in the slot-pool layout (DESIGN.md §11.1) —
+    each slot then reads its own learned positional embedding row.
+    ``WhisperPagedDecodeState`` dispatches to the paged twin
+    (DESIGN.md §15.2)."""
+    if isinstance(state, WhisperPagedDecodeState):
+        return _decode_step_paged(params, cfg, token, state, engine=engine)
+    x = layers.embed(params["embed"], token)
+    pos = (state.self_kv.length[0] if state.self_kv.length.ndim
+           else state.self_kv.length)
+    table = params["dec_pos"]["table"]
+    if pos.ndim:                                    # per-slot positions (B,)
+        x = x + jnp.take(table, pos, axis=0)[:, None].astype(x.dtype)
+    else:
+        x = x + jax.lax.dynamic_slice_in_dim(table, pos, 1,
+                                             axis=0).astype(x.dtype)
+    return _decoder_stack(params, cfg, x, state, engine=engine)
+
+
+def verify_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                state: WhisperDecodeState, *, engine=None
+                ) -> Tuple[jax.Array, WhisperDecodeState]:
+    """Score a W-token window in ONE forward (DESIGN.md §17.1): tokens
+    (B, W) int32 -> (logits (B, W, V), state') with every layer's self-KV
+    advanced by W. ``logits[:, j]`` is the next-token distribution after
+    consuming ``tokens[:, :j+1]`` — exactly what ``decode_step`` would
+    return fed those tokens one at a time, which is what makes
+    speculative acceptance token-exact against the greedy verifier.
+    Position handling mirrors ``decode_step``: the layer-0 self-KV length
+    is the window base, scalar (lockstep) or per-row (slot layout)."""
+    if isinstance(state, WhisperPagedDecodeState):
+        raise NotImplementedError(
+            "the W-position verify window is contiguous-layout only "
+            "(paged KV writes one entry per step, DESIGN.md §15.2)")
+    w = tokens.shape[1]
+    x = layers.embed(params["embed"], tokens)
+    pos = (state.self_kv.length[0] if state.self_kv.length.ndim
+           else state.self_kv.length)
+    table = params["dec_pos"]["table"]
+    if pos.ndim:                                    # per-slot positions (B,)
+        posw = pos[:, None] + jnp.arange(w)[None, :]
+        x = x + jnp.take(table, posw, axis=0).astype(x.dtype)
+    else:
+        x = x + jax.lax.dynamic_slice_in_dim(table, pos, w,
+                                             axis=0)[None].astype(x.dtype)
+    return _decoder_stack(params, cfg, x, state, engine=engine)

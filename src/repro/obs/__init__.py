@@ -221,6 +221,10 @@ class Telemetry:
         flops.set_total(s.residual_flops, kind="residual")
         for dev, v in sorted(s.by_device.items()):
             flops.set_total(v, device=dev)
+        # per-role split for multi-model (speculative) engines
+        # (DESIGN.md §17.2) — sums to the kind= totals exactly
+        for role, v in sorted(s.by_role.items()):
+            flops.set_total(v, role=role)
         calls = self.metrics.counter("repro_ledger_calls_total")
         for backend, v in sorted(s.by_backend.items()):
             calls.set_total(v, backend=backend)

@@ -309,7 +309,19 @@ def serving_registry() -> MetricsRegistry:
               help="backend-registry dispatch resolutions at trace time, "
                    "by segment and backend (DESIGN.md §12)")
     r.counter("repro_ledger_flops_total",
-              help="ledger-fed FLOPs by kind/device (DESIGN.md §16.3)")
+              help="ledger-fed FLOPs by kind/device/role (DESIGN.md §16.3)")
+    # speculative decoding (DESIGN.md §17.3): drafted vs accepted token
+    # counts and round count feed the acceptance-rate report
+    r.counter("repro_spec_rounds_total",
+              help="speculative draft+verify rounds (DESIGN.md §17)")
+    r.counter("repro_spec_drafted_total",
+              help="draft tokens proposed across active slots")
+    r.counter("repro_spec_accepted_total",
+              help="draft tokens accepted by the verifier")
+    r.gauge("repro_spec_acceptance_rate",
+            help="accepted/drafted over the engine lifetime")
+    r.gauge("repro_spec_verify_traces", help="verify step_fn trace count "
+            "(1 = zero retraces after warmup, DESIGN.md §17.3)")
     r.counter("repro_ledger_calls_total",
               help="ledger-fed call counts by backend")
     return r

@@ -126,6 +126,7 @@ class ServeEngine:
     _serve_params: Any = field(default=None, repr=False)
     _decode_jit: Any = field(default=None, repr=False)
     _step_traces: int = field(default=0, repr=False)
+    _verify_traces: int = field(default=0, repr=False)
     _scheduler: Any = field(default=None, repr=False)
 
     def __post_init__(self):
@@ -194,6 +195,26 @@ class ServeEngine:
 
         self._step_jit = jax.jit(step_fn)
 
+        def verify_core(params, tokens, state):
+            """The k-position verify step (DESIGN.md §17.1): score a
+            (B, W) window in one forward, advancing every cache length
+            by W. Lives next to ``_decode_jit`` so the speculative
+            engine drives the same compiled-program discipline — one
+            trace per (B, W, frames) shape."""
+            with shard_ctx.activation_sharding(mesh):
+                return model_lib.verify_step(params, cfg, tokens, state,
+                                             engine=engine)
+
+        def verify_fn(params, tokens, state):
+            # counted exactly like _step_traces (host code runs at trace
+            # time); plan recording uses the counter-free _verify_fn so
+            # an eval_shape never inflates the zero-retrace gate
+            self._verify_traces += 1
+            return verify_core(params, tokens, state)
+
+        self._verify_fn = verify_core
+        self._verify_jit = jax.jit(verify_fn)
+
         if cfg.family == "audio":
             def prefill_fn(params, mel):
                 """Whisper prefill: encoder once per utterance batch +
@@ -237,15 +258,18 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def _key(self, phase: str, batch: int, *extra: Hashable,
-             pages: Optional[Any] = None) -> Hashable:
+             pages: Optional[Any] = None, role: Optional[str] = None,
+             k: Optional[int] = None) -> Hashable:
         """This engine's canonical plan key: ``(phase, quant, batch,
         *extra)`` plus the mesh signature when serving sharded
-        (DESIGN.md §13) and the page geometry when serving paged
-        (DESIGN.md §15.5) — the one-shot paths and both schedulers build
-        keys here, so sharded/paged programs at the same shapes land in
-        distinct ``PlanCache`` entries."""
+        (DESIGN.md §13), the page geometry when serving paged
+        (DESIGN.md §15.5), and the draft/verify role + window size when
+        serving speculatively (DESIGN.md §17.2) — the one-shot paths and
+        every scheduler build keys here, so sharded/paged/speculative
+        programs at the same shapes land in distinct ``PlanCache``
+        entries."""
         return plan_key(phase, self._serve_quant, batch, *extra,
-                        mesh=self.mesh, pages=pages)
+                        mesh=self.mesh, pages=pages, role=role, k=k)
 
     def _plan(self, key: Hashable, fn, *args) -> Optional[DispatchPlan]:
         """Routing plan for ``fn(*args)``, cached per shape key
@@ -412,6 +436,35 @@ class ServeEngine:
                 self, n_slots=want_slots, n_frames=want_frames)
         return self._scheduler
 
+    def speculative(self, draft_cfg: ModelConfig, draft_params: Any, *,
+                    k: int = 4, draft_quant: str = "none"):
+        """A speculative-decoding engine over this verifier
+        (serve/speculative.py, DESIGN.md §17): ``draft_cfg``/``draft_params``
+        is the cheap ladder model (whisper-tiny against a base/small
+        verifier) that proposes ``k`` tokens per round; this engine's
+        jitted verify step scores the k+1 window and greedy acceptance
+        keeps output token-exact with ``transcribe()`` alone.
+
+        The draft model runs dense on the cheapest backend by default: its
+        dispatcher pins ``xla_ref`` (prefer_pallas=False translated by the
+        registry, DESIGN.md §12.3) while the verifier keeps its own
+        pallas/offload routing — and both share ONE ``OffloadLedger`` so
+        the by_role split and the §16.2 span exactness cover the whole
+        two-model engine."""
+        from repro.serve.speculative import SpeculativeEngine
+        draft_offload = None
+        if self.offload is not None:
+            draft_offload = OffloadEngine(
+                vmem_budget_kb=self.offload.vmem_budget_kb,
+                burst=self.offload.burst,
+                prefer_pallas=False,            # cheapest backend pin
+                interpret=self.offload.interpret,
+                ledger=self.offload.ledger)     # ONE ledger, two models
+        draft = ServeEngine(draft_cfg, draft_params, max_len=self.max_len,
+                            quant=draft_quant, offload=draft_offload,
+                            eos_id=self.eos_id, mesh=self.mesh)
+        return SpeculativeEngine(verifier=self, draft=draft, k=k)
+
     def paged_scheduler(self, n_slots: int = 4,
                         n_frames: Optional[int] = None, **page_cfg):
         """A paged-pool continuous-batching scheduler over this engine
@@ -478,7 +531,12 @@ class ServeEngine:
                                # serving (DESIGN.md §13); sums to the
                                # offloaded+fallback+residual flop total
                                "by_device": dict(
-                                   self.offload.stats.by_device)}
+                                   self.offload.stats.by_device),
+                               # per-role FLOP attribution for multi-model
+                               # (speculative) engines (DESIGN.md §17.2);
+                               # sums to the same flop total
+                               "by_role": dict(
+                                   self.offload.stats.by_role)}
         if self.offload is not None and self.offload.tuner is not None:
             t = self.offload.tuner
             rep["tuning"] = {"cache_hits": t.cache.hits,

@@ -1,0 +1,338 @@
+"""Speculative decoding across the Whisper ladder (DESIGN.md §17).
+
+The paper's scaling study runs tiny -> base -> small, and its PDP
+advantage narrows exactly where steps get expensive (32KB local-memory
+coverage drops from ~94% on tiny to ~66% on base/small). This module
+spends cheap tiny-model FLOPs to amortize those expensive steps: a
+``SpeculativeEngine`` drafts ``k`` tokens per request with the ladder's
+cheapest model, scores the whole ``k+1``-token window in ONE jitted
+verifier forward (``ServeEngine._verify_jit`` -> ``models.verify_step``,
+DESIGN.md §17.1), accepts the longest draft prefix the verifier agrees
+with, and falls back to the verifier's own token at the first mismatch —
+so the emitted stream is token-exact with greedy decode on the verifier
+alone (``accept_spec`` is the pure acceptance rule the property tests
+drive).
+
+Two models, one discipline (DESIGN.md §17.2): each model keeps its own
+``PlanCache`` with role-tagged keys (draft/verify programs never collide
+with plain greedy plans), the draft's dispatcher pins the cheapest
+backend while the verifier keeps pallas/offload routing, and both commit
+into ONE ``OffloadLedger`` with ``role="draft"``/``"verify"`` tags —
+every round's interleaved commits sit inside one ledger span, so the
+§16.2 integer-exactness invariant and the by_role split close together.
+
+The acceptance loop is zero-retrace (DESIGN.md §17.3): per round it runs
+``k+1`` draft step calls (the extra feed writes d_k's KV entry so a
+full-accept rollforward is always cache-consistent), one verify call,
+one jitted length splice per model (``model.set_slot_lengths`` — stale
+window entries beyond the accepted prefix stay in place, masked then
+overwritten), and ONE host sync — against the greedy loop's sync per
+token, a second, structural source of the speedup next to the
+draft/verifier FLOP gap.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.models import model as model_lib
+from repro.serve.engine import GenerationResult, ServeEngine
+
+
+def accept_spec(drafts: np.ndarray, vtoks: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The pure greedy-acceptance rule (DESIGN.md §17.1).
+
+    drafts: (B, k) draft proposals d_1..d_k; vtoks: (B, k+1) verifier
+    argmaxes over the window [t_0, d_1..d_k] — ``vtoks[:, j]`` is what
+    greedy decode on the verifier would emit after consuming the first
+    ``j+1`` window tokens. Returns ``(accept_len, committed, n_emit)``:
+      accept_len (B,)     longest prefix with drafts[j] == vtoks[j]
+      committed (B, k+1)  the emitted tokens — accepted drafts then the
+                          verifier's own token at the first mismatch (or
+                          its bonus token after a full accept); entries
+                          past ``n_emit`` are padding
+      n_emit (B,)         accept_len + 1 (every round emits >= 1 token)
+
+    Token-exact by construction: the emitted prefix is precisely what
+    feeding the verifier one token at a time would produce, for ANY
+    draft/verify pair (tests/test_speculative.py property)."""
+    drafts = np.asarray(drafts)
+    vtoks = np.asarray(vtoks)
+    b, k = drafts.shape
+    if vtoks.shape != (b, k + 1):
+        raise ValueError(f"vtoks must be (B, k+1); got {vtoks.shape} "
+                         f"for drafts {drafts.shape}")
+    mismatch = drafts != vtoks[:, :k]
+    accept_len = np.where(mismatch.any(axis=1), mismatch.argmax(axis=1),
+                          k).astype(np.int64)
+    committed = np.concatenate(
+        [drafts, np.zeros((b, 1), drafts.dtype)], axis=1)
+    rows = np.arange(b)
+    committed[rows, accept_len] = vtoks[rows, accept_len]
+    return accept_len, committed, accept_len + 1
+
+
+@jax.jit
+def _rollback(state, new_len):
+    """Jitted per-slot length splice (DESIGN.md §17.1): one compiled
+    program per state structure (verifier + draft), zero retraces across
+    rounds — mixed accept lengths are data, not shapes."""
+    return model_lib.set_slot_lengths(state, new_len)
+
+
+@dataclass
+class SpeculativeEngine:
+    """Two-model speculative decoder (DESIGN.md §17): ``draft`` proposes
+    ``k`` tokens per round, ``verifier`` scores the k+1 window in one
+    jitted forward, greedy acceptance keeps the output token-exact with
+    ``verifier.transcribe()``. Build via ``ServeEngine.speculative()``
+    (which pins the draft to the cheapest backend and shares the
+    verifier's ledger); constructing directly works when the caller owns
+    both engines."""
+    verifier: ServeEngine
+    draft: ServeEngine
+    k: int = 4
+    # lifetime counters (the acceptance-rate report, DESIGN.md §17.3)
+    rounds: int = 0
+    drafted: int = 0
+    accepted: int = 0
+
+    def __post_init__(self):
+        vc, dc = self.verifier.cfg, self.draft.cfg
+        if vc.family != "audio" or dc.family != "audio":
+            raise NotImplementedError(
+                "speculative serving is wired for the audio family "
+                "(the Whisper ladder, DESIGN.md §17)")
+        if dc.vocab_size != vc.vocab_size:
+            raise ValueError(
+                f"draft and verifier must share a vocabulary to compare "
+                f"tokens: {dc.vocab_size} != {vc.vocab_size}")
+        if self.k < 1:
+            raise ValueError("k must be >= 1")
+
+    # ------------------------------------------------------------------
+    def transcribe(self, mel: np.ndarray, sot_id: int = 1,
+                   max_new: int = 32) -> List[GenerationResult]:
+        """Speculative twin of ``ServeEngine.transcribe`` — same token
+        contract (the generated tokens only, rows truncated at their
+        first EOS inclusive), token-exact with the verifier's own greedy
+        decode of the same batch."""
+        v, d, k = self.verifier, self.draft, self.k
+        w = k + 1
+        b, f = int(mel.shape[0]), int(mel.shape[1])
+        need = max_new + k + 1           # window writes reach pos G + k
+        if v.max_len < need or d.max_len < need:
+            raise ValueError(
+                f"max_len must be >= max_new + k + 1 = {need} "
+                f"(verifier {v.max_len}, draft {d.max_len})")
+        if v.offload is not None and v.offload.tuner is not None:
+            tuner = v.offload.tuner
+            n0 = tuner.searches
+            from repro.models import whisper as whisper_lib
+            whisper_lib.warm_tuning(v.cfg, v.offload, n_frames=f, batch=b,
+                                    n_tokens=max_new, quant=v._serve_quant)
+            # the verify window's m = B*(k+1) rows per linear
+            whisper_lib.warm_tuning(v.cfg, v.offload, n_frames=f,
+                                    batch=b * w, n_tokens=max_new,
+                                    quant=v._serve_quant)
+            if tuner.searches > n0:
+                tuner.save()
+        mel_j = jnp.asarray(mel)
+        tele = v.telemetry
+
+        # plans: prefills are the SAME traced programs as the plain path
+        # (plain keys -> shared PlanCache entries); the draft step and the
+        # verify window are role-keyed (DESIGN.md §17.2)
+        v_prefill_plan = v._plan(v._key("prefill", b, f), v._prefill_fn,
+                                 v._serve_params, mel_j)
+        d_prefill_plan = d._plan(d._key("prefill", b, f), d._prefill_fn,
+                                 d._serve_params, mel_j)
+
+        t0 = time.perf_counter()
+        with obs.maybe_span(tele, "spec_prefill", cat="engine", ledger=True,
+                            args={"batch": b, "frames": f}):
+            v_mem, v_state = v._prefill_jit(v._serve_params, mel_j)
+            d_mem, d_state = d._prefill_jit(d._serve_params, mel_j)
+            jax.block_until_ready(v_mem)
+            jax.block_until_ready(d_mem)
+            prefill_s = time.perf_counter() - t0
+            if v.offload is not None:
+                v.offload.ledger.commit(v_prefill_plan, times=1,
+                                        role="verify")
+            if d.offload is not None:
+                d.offload.ledger.commit(d_prefill_plan, times=1,
+                                        role="draft")
+
+        # per-row accept lengths need per-slot positions: the slot layout
+        # (DESIGN.md §11.1) inside a run-to-completion static batch
+        v_state = model_lib.slot_layout(v_state, b)
+        d_state = model_lib.slot_layout(d_state, b)
+
+        cur = jnp.full((b, 1), sot_id, jnp.int32)
+        nodone = jnp.zeros((b,), bool)
+        d_step_plan = d._plan(d._key("step", b, f, role="draft"),
+                              d._decode_fn, d._serve_params, cur, d_state)
+        v_verify_plan = v._plan(
+            v._key("verify", b, f, role="verify", k=k), v._verify_fn,
+            v._serve_params, jnp.zeros((b, w), jnp.int32), v_state)
+
+        toks: List[List[int]] = [[] for _ in range(b)]
+        done = np.zeros(b, bool)
+        prev_len = np.zeros(b, np.int64)
+        eos = v.eos_id if (v.eos_id is not None and v.eos_id >= 0) else None
+        rows = np.arange(b)
+
+        t0 = time.perf_counter()
+        while not done.all():
+            h = tele.ledger_open() if tele is not None else None
+            active_mask = ~done
+            active = int(active_mask.sum())
+            # --- draft k tokens; the k+1-th feed writes d_k's KV entry
+            # so a full accept leaves the draft cache consistent
+            dtoks = []
+            dt = cur
+            for _ in range(k):
+                dt, _, d_state = d._step_jit(d._serve_params, dt, nodone,
+                                             d_state)
+                dtoks.append(dt)
+            _, _, d_state = d._step_jit(d._serve_params, dtoks[-1], nodone,
+                                        d_state)
+            # --- verify the whole window in ONE forward
+            window = jnp.concatenate([cur] + dtoks, axis=1)      # (B, k+1)
+            vlogits, v_state = v._verify_jit(v._serve_params, window,
+                                             v_state)
+            vtoks = v._argmax(vlogits)                           # (B, k+1)
+            # --- the round's single host sync
+            vt, win = jax.device_get((vtoks, window))
+            accept_len, committed, n_emit = accept_spec(win[:, 1:], vt)
+            # --- emit + rollback: fed == emitted per row, so the splice
+            # target is prev + used; finished rows freeze (used = 0)
+            new_len = prev_len.copy()
+            for i in range(b):
+                if done[i]:
+                    continue
+                used = 0
+                for t in committed[i, :n_emit[i]]:
+                    toks[i].append(int(t))
+                    used += 1
+                    if eos is not None and int(t) == eos:
+                        done[i] = True
+                        break
+                    if len(toks[i]) >= max_new:
+                        done[i] = True
+                        break
+                new_len[i] = prev_len[i] + used
+            prev_len = new_len
+            nl = jnp.asarray(new_len, jnp.int32)
+            v_state = _rollback(v_state, nl)
+            d_state = _rollback(d_state, nl)
+            cur = jnp.asarray(vt[rows, accept_len][:, None].astype(np.int32))
+            # --- accounting: draft + verify commits interleave inside
+            # ONE ledger span (the §16.2 exactness the satellite gates)
+            self.rounds += 1
+            self.drafted += active * k
+            self.accepted += int(accept_len[active_mask].sum())
+            if d.offload is not None:
+                d.offload.ledger.commit(d_step_plan, times=k + 1,
+                                        role="draft")
+            if v.offload is not None:
+                v.offload.ledger.commit(v_verify_plan, times=1,
+                                        role="verify")
+            if tele is not None:
+                tele.ledger_close(h, "spec_round", cat="step",
+                                  args={"round": self.rounds,
+                                        "active": int(active)})
+                tele.inc("repro_spec_rounds_total")
+                tele.inc("repro_spec_drafted_total", active * k)
+                tele.inc("repro_spec_accepted_total",
+                         int(accept_len[active_mask].sum()))
+        jax.block_until_ready(cur)
+        decode_s = time.perf_counter() - t0
+        if tele is not None:
+            tele.gauge("repro_spec_acceptance_rate", self.acceptance_rate())
+            tele.gauge("repro_spec_verify_traces", v._verify_traces)
+        return [GenerationResult(tokens=toks[i], prefill_s=prefill_s / b,
+                                 decode_s=decode_s / b, steps=len(toks[i]))
+                for i in range(b)]
+
+    # ------------------------------------------------------------------
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(self.drafted, 1)
+
+    def stats(self) -> Dict[str, Any]:
+        """The consolidated speculative report (DESIGN.md §17.3):
+        acceptance + the zero-retrace counters + the by_role FLOP split
+        from the shared ledger."""
+        out = {"k": self.k, "rounds": self.rounds, "drafted": self.drafted,
+               "accepted": self.accepted,
+               "acceptance_rate": self.acceptance_rate(),
+               "verify_traces": self.verifier._verify_traces,
+               "draft_step_traces": self.draft._step_traces}
+        if self.verifier.offload is not None:
+            out["by_role"] = dict(self.verifier.offload.stats.by_role)
+        return out
+
+
+@dataclass
+class SpecScheduler:
+    """Wave scheduler over a ``SpeculativeEngine`` (DESIGN.md §17.4):
+    queued utterances run to completion in fixed-width waves — one
+    compiled shape per (wave width, frame count), short waves padded with
+    zero-mel rows — so steady-state serving reuses the engine's compiled
+    draft/verify programs across waves. Deliberately simpler than the
+    continuous-batching scheduler (DESIGN.md §11): speculative rounds
+    advance rows by *different* amounts, so mid-flight admission would
+    re-prefill anyway; run-to-completion waves keep the zero-retrace and
+    token-exactness guarantees without a slot pool."""
+    engine: SpeculativeEngine
+    n_slots: int = 4
+    _queue: List[Tuple[int, np.ndarray, int, int]] = field(
+        default_factory=list)
+    _next_rid: int = 0
+
+    def submit(self, mel: np.ndarray, max_new: int = 32,
+               sot_id: int = 1) -> int:
+        arr = np.asarray(mel, np.float32)
+        if arr.ndim == 2:
+            arr = arr[None]
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append((rid, arr, max_new, sot_id))
+        return rid
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    def run(self) -> Dict[int, GenerationResult]:
+        out: Dict[int, GenerationResult] = {}
+        while self._queue:
+            wave, self._queue = (self._queue[:self.n_slots],
+                                 self._queue[self.n_slots:])
+            frames = {q[1].shape[1] for q in wave}
+            sots = {q[3] for q in wave}
+            if len(frames) > 1 or len(sots) > 1:
+                raise ValueError(
+                    "a wave must share frame count and SOT token "
+                    f"(got frames={sorted(frames)}, sot={sorted(sots)})")
+            mels = [q[1] for q in wave]
+            pad = self.n_slots - len(wave)
+            if pad:
+                mels.append(np.zeros((pad, *mels[0].shape[1:]), np.float32))
+            batch = np.concatenate(mels, axis=0)
+            max_new = max(q[2] for q in wave)
+            results = self.engine.transcribe(batch, sot_id=wave[0][3],
+                                             max_new=max_new)
+            for (rid, _, req_max, _), r in zip(wave, results):
+                row = r.tokens[:req_max]
+                out[rid] = GenerationResult(
+                    tokens=row, prefill_s=r.prefill_s,
+                    decode_s=r.decode_s, steps=len(row))
+        return out

@@ -89,6 +89,29 @@ def test_transcribe_with_offload_engine(whisper_setup):
     assert rep["offload_rate"] > 0
 
 
+@pytest.mark.parametrize("arch", ["whisper-base", "whisper-small"])
+def test_transcribe_ladder_baselines(arch):
+    """Plain ServeEngine decode on the ladder's verifier rungs — the
+    baseline the speculative engine (DESIGN.md §17) must stay token-exact
+    against. Deterministic across repeat calls, steps honored, dense and
+    q8_0+offload agree on the token contract."""
+    cfg = get_smoke_config(arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg, 64)
+    mel = np.random.default_rng(1).standard_normal(
+        (2, 16, cfg.n_mels)).astype(np.float32)
+    eng = ServeEngine(cfg, params, max_len=64, quant="none", eos_id=-1)
+    r1 = eng.transcribe(mel, max_new=6)
+    r2 = eng.transcribe(mel, max_new=6)
+    assert [r.tokens for r in r1] == [r.tokens for r in r2]
+    assert all(r.steps == 6 and len(r.tokens) == 6 for r in r1)
+    assert all(0 <= t < cfg.vocab_size for r in r1 for t in r.tokens)
+    off = OffloadEngine(interpret=True)
+    q8 = ServeEngine(cfg, params, max_len=64, quant="q8_0", offload=off,
+                     eos_id=-1).transcribe(mel, max_new=6)
+    assert all(r.steps == 6 for r in q8)
+    assert off.stats.offloaded_calls + off.stats.fallback_calls > 0
+
+
 def test_per_request_eos_truncation(lm_setup):
     """Early-finished rows no longer echo post-EOS argmax tokens or the
     batch-global step count: each row truncates at ITS first EOS

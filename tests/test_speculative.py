@@ -1,0 +1,323 @@
+"""Speculative decoding (DESIGN.md §17): acceptance-rule properties,
+token-exact greedy parity across the smoke ladder, zero-retrace under
+mixed accept lengths, and two-model ledger attribution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs.registry import get_smoke_config
+from repro.core.offload import OffloadEngine
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+from repro.serve.speculative import SpecScheduler, accept_spec
+from tests._hyp import given, settings, st
+
+
+@pytest.fixture(scope="module")
+def ladder():
+    tiny = get_smoke_config("whisper-tiny")
+    base = get_smoke_config("whisper-base")
+    tp = M.init_params(jax.random.PRNGKey(0), tiny)
+    bp = M.init_params(jax.random.PRNGKey(1), base)
+    return tiny, tp, base, bp
+
+
+@pytest.fixture(scope="module")
+def mel(ladder):
+    tiny = ladder[0]
+    return np.asarray(jax.random.normal(jax.random.PRNGKey(2),
+                                        (2, 16, tiny.n_mels)), np.float32)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance rule (pure, DESIGN.md §17.1)
+# ---------------------------------------------------------------------------
+
+def _greedy_reference(drafts_row, vtoks_row):
+    """What feeding the verifier one token at a time would emit: walk the
+    window; at position j the verifier (having consumed j+1 window tokens)
+    emits vtoks[j]; the round ends the first time the draft's next feed
+    disagrees with that emission."""
+    out = []
+    k = len(drafts_row)
+    for j in range(k):
+        out.append(int(vtoks_row[j]))
+        if drafts_row[j] != vtoks_row[j]:
+            return out
+    out.append(int(vtoks_row[k]))
+    return out
+
+
+def test_accept_spec_deterministic_cases():
+    # full accept: drafts == verifier emissions -> k accepted + bonus
+    a, c, n = accept_spec(np.array([[5, 6, 7]]), np.array([[5, 6, 7, 8]]))
+    assert (a, list(c[0, :n[0]])) == (3, [5, 6, 7, 8])
+    # first-token mismatch: zero accepted, verifier's token emitted
+    a, c, n = accept_spec(np.array([[5, 6, 7]]), np.array([[9, 6, 7, 8]]))
+    assert (a, n, list(c[0, :1])) == (0, 1, [9])
+    # mid-window mismatch: prefix kept, correction replaces the miss
+    a, c, n = accept_spec(np.array([[5, 6, 7]]), np.array([[5, 9, 7, 8]]))
+    assert (a, n, list(c[0, :2])) == (1, 2, [5, 9])
+
+
+@pytest.mark.parametrize("k", [1, 4, 8])
+def test_accept_spec_matches_sequential_greedy(k):
+    rng = np.random.default_rng(k)
+    drafts = rng.integers(0, 4, size=(5, k))
+    vtoks = rng.integers(0, 4, size=(5, k + 1))
+    accept_len, committed, n_emit = accept_spec(drafts, vtoks)
+    for r in range(5):
+        ref = _greedy_reference(drafts[r], vtoks[r])
+        assert list(committed[r, :n_emit[r]]) == ref
+        assert accept_len[r] == len(ref) - 1
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_accept_spec_property(data):
+    """For ANY drafts/vtoks pair, the committed prefix equals what pure
+    sequential greedy on the verifier would emit, and every round makes
+    progress (n_emit >= 1)."""
+    k = data.draw(st.integers(min_value=1, max_value=8))
+    b = data.draw(st.integers(min_value=1, max_value=4))
+    tok = st.integers(min_value=0, max_value=9)
+    drafts = np.array(data.draw(st.lists(
+        st.lists(tok, min_size=k, max_size=k), min_size=b, max_size=b)))
+    vtoks = np.array(data.draw(st.lists(
+        st.lists(tok, min_size=k + 1, max_size=k + 1),
+        min_size=b, max_size=b)))
+    accept_len, committed, n_emit = accept_spec(drafts, vtoks)
+    assert (n_emit >= 1).all() and (n_emit == accept_len + 1).all()
+    for r in range(b):
+        assert list(committed[r, :n_emit[r]]) == _greedy_reference(
+            drafts[r], vtoks[r])
+
+
+def test_accept_spec_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        accept_spec(np.zeros((2, 3), int), np.zeros((2, 3), int))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end parity with the verifier's own greedy decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 4, 8])
+def test_spec_parity_dense(ladder, mel, k):
+    """Random-init ladder: draft disagrees constantly, so this drives the
+    correction/rollback path — tokens must still be exactly the
+    verifier's greedy output."""
+    tiny, tp, base, bp = ladder
+    v = ServeEngine(base, bp, max_len=64, quant="none", eos_id=-1)
+    ref = v.transcribe(mel, sot_id=1, max_new=10)
+    spec = v.speculative(tiny, tp, k=k)
+    got = spec.transcribe(mel, sot_id=1, max_new=10)
+    assert [r.tokens for r in ref] == [g.tokens for g in got]
+    assert all(len(g.tokens) == 10 for g in got)
+
+
+def test_spec_parity_q8_offload(ladder, mel):
+    tiny, tp, base, bp = ladder
+    off = OffloadEngine(interpret=True)
+    v = ServeEngine(base, bp, max_len=64, quant="q8_0", offload=off,
+                    eos_id=-1)
+    ref = v.transcribe(mel, sot_id=1, max_new=8)
+    spec = v.speculative(tiny, tp, k=4)
+    got = spec.transcribe(mel, sot_id=1, max_new=8)
+    assert [r.tokens for r in ref] == [g.tokens for g in got]
+
+
+def test_spec_self_draft_full_accept(ladder, mel):
+    """Draft == verifier -> every window fully accepted: k+1 tokens per
+    round, acceptance rate 1.0, and parity still holds (the bonus-token
+    path)."""
+    _, _, base, bp = ladder
+    v = ServeEngine(base, bp, max_len=64, quant="none", eos_id=-1)
+    ref = v.transcribe(mel, sot_id=1, max_new=12)
+    spec = v.speculative(base, bp, k=3)
+    got = spec.transcribe(mel, sot_id=1, max_new=12)
+    assert [r.tokens for r in ref] == [g.tokens for g in got]
+    assert spec.acceptance_rate() == 1.0
+    assert spec.rounds == 3          # ceil(12 / (k+1))
+
+
+def test_spec_eos_truncation(ladder):
+    """A row whose verifier output hits EOS mid-window must cut at EOS
+    inclusive (the _finalize contract) and freeze — laggard rows keep
+    decoding without overflowing the frozen row's cache."""
+    tiny, tp, base, bp = ladder
+    mel2 = np.asarray(jax.random.normal(jax.random.PRNGKey(7),
+                                        (2, 16, tiny.n_mels)), np.float32)
+    v = ServeEngine(base, bp, max_len=64, quant="none", eos_id=-1)
+    ref = v.transcribe(mel2, sot_id=1, max_new=10)
+    eos = int(ref[0].tokens[3])      # forge an EOS that fires mid-stream
+    v_eos = ServeEngine(base, bp, max_len=64, quant="none", eos_id=eos)
+    ref_eos = v_eos.transcribe(mel2, sot_id=1, max_new=10)
+    spec = v_eos.speculative(tiny, tp, k=4)
+    got = spec.transcribe(mel2, sot_id=1, max_new=10)
+    assert [r.tokens for r in ref_eos] == [g.tokens for g in got]
+    assert any(len(r.tokens) < 10 for r in ref_eos)  # EOS actually fired
+
+
+def test_spec_max_len_guard(ladder, mel):
+    tiny, tp, base, bp = ladder
+    v = ServeEngine(base, bp, max_len=16, quant="none", eos_id=-1)
+    spec = v.speculative(tiny, tp, k=4)
+    with pytest.raises(ValueError, match="max_len"):
+        spec.transcribe(mel, sot_id=1, max_new=16)
+
+
+def test_spec_vocab_mismatch_rejected(ladder):
+    tiny, tp, base, bp = ladder
+    import dataclasses
+    bad = dataclasses.replace(tiny, vocab_size=tiny.vocab_size + 16)
+    v = ServeEngine(base, bp, max_len=64, quant="none", eos_id=-1)
+    with pytest.raises(ValueError, match="vocab"):
+        v.speculative(bad, tp, k=4)
+
+
+# ---------------------------------------------------------------------------
+# zero-retrace + two-model ledger attribution (DESIGN.md §17.2/§17.3)
+# ---------------------------------------------------------------------------
+
+def test_spec_zero_retrace_mixed_accepts(ladder, mel):
+    """Mixed accept lengths are data, not shapes: after the first round
+    the draft step, verify window, and rollback splice must all be cache
+    hits — across repeat calls too."""
+    tiny, tp, base, bp = ladder
+    v = ServeEngine(base, bp, max_len=64, quant="none", eos_id=-1)
+    spec = v.speculative(tiny, tp, k=4)
+    spec.transcribe(mel, sot_id=1, max_new=10)
+    v_traces, d_traces = v._verify_traces, spec.draft._step_traces
+    assert (v_traces, d_traces) == (1, 1)
+    spec.transcribe(mel, sot_id=1, max_new=10)
+    assert v._verify_traces == v_traces
+    assert spec.draft._step_traces == d_traces
+    # every round emits 1..k+1 tokens per row -> bounded round count
+    assert 4 <= spec.rounds <= 20 and spec.stats()["verify_traces"] == 1
+
+
+def test_spec_ledger_by_role(ladder, mel):
+    """Draft and verifier commit into ONE ledger with role tags; the
+    by_role split must sum exactly to the flop totals (the by_device-
+    shaped invariant, DESIGN.md §17.2)."""
+    tiny, tp, base, bp = ladder
+    off = OffloadEngine(interpret=True)
+    v = ServeEngine(base, bp, max_len=64, quant="q8_0", offload=off,
+                    eos_id=-1)
+    spec = v.speculative(tiny, tp, k=4)
+    spec.transcribe(mel, sot_id=1, max_new=8)
+    s = off.stats
+    assert spec.draft.offload is not None
+    assert spec.draft.offload.ledger is off.ledger
+    assert s.by_role.get("draft", 0) > 0 and s.by_role.get("verify", 0) > 0
+    total = s.offloaded_flops + s.fallback_flops + s.residual_flops
+    assert sum(s.by_role.values()) == total
+    # draft pinned to the cheapest backend (DESIGN.md §12.3)
+    assert spec.draft.offload.prefer_pallas is False
+
+
+def test_spec_ledger_span_exactness(ladder, mel):
+    """Interleaved draft/verify commits inside per-round ledger spans keep
+    the §16.2 integer invariant: claimed span FLOPs == ledger delta."""
+    tiny, tp, base, bp = ladder
+    tele = obs.Telemetry()
+    off = OffloadEngine(interpret=True)
+    v = ServeEngine(base, bp, max_len=64, quant="q8_0", offload=off,
+                    eos_id=-1, telemetry=tele)
+    spec = v.speculative(tiny, tp, k=3)
+    spec.transcribe(mel, sot_id=1, max_new=6)
+    rep = tele.ledger_consistent()
+    assert rep["exact"], rep
+    assert rep["claimed_flops"] > 0
+
+
+def test_spec_counters_consistent(ladder, mel):
+    tiny, tp, base, bp = ladder
+    v = ServeEngine(base, bp, max_len=64, quant="none", eos_id=-1)
+    spec = v.speculative(tiny, tp, k=4)
+    spec.transcribe(mel, sot_id=1, max_new=10)
+    st_ = spec.stats()
+    # rows that finish early stop drafting, so <= rounds * k * B
+    assert 0 < st_["drafted"] <= spec.rounds * 4 * mel.shape[0]
+    assert 0 <= st_["accepted"] <= st_["drafted"]
+    assert st_["acceptance_rate"] == spec.acceptance_rate()
+
+
+# ---------------------------------------------------------------------------
+# plan keys + scheduler
+# ---------------------------------------------------------------------------
+
+def test_spec_plan_keys_role_tagged(ladder, mel):
+    """Speculative programs must never collide with plain greedy plans at
+    the same shapes: the verify key carries role+k, the draft step key its
+    role (DESIGN.md §17.2)."""
+    tiny, tp, base, bp = ladder
+    off = OffloadEngine(interpret=True)
+    v = ServeEngine(base, bp, max_len=64, quant="q8_0", offload=off,
+                    eos_id=-1)
+    v.transcribe(mel, sot_id=1, max_new=4)          # plain keys first
+    spec = v.speculative(tiny, tp, k=4)
+    spec.transcribe(mel, sot_id=1, max_new=4)
+    v_keys = set(v._plans.plans)
+    assert any(("role", "verify") in k and ("k", 4) in k for k in v_keys
+               if isinstance(k, tuple))
+    d_keys = set(spec.draft._plans.plans)
+    assert any(("role", "draft") in k for k in d_keys
+               if isinstance(k, tuple))
+
+
+def test_spec_scheduler_waves(ladder, mel):
+    """Wave scheduler: per-request max_new truncation, short-wave padding,
+    and token parity with the verifier's one-shot transcribe."""
+    tiny, tp, base, bp = ladder
+    v = ServeEngine(base, bp, max_len=64, quant="none", eos_id=-1)
+    sch = SpecScheduler(v.speculative(tiny, tp, k=4), n_slots=2)
+    rids = [sch.submit(mel[0], max_new=6), sch.submit(mel[1], max_new=10),
+            sch.submit(mel[0], max_new=8)]
+    assert sch.n_queued == 3
+    res = sch.run()
+    assert sch.n_queued == 0
+    ref = v.transcribe(mel, sot_id=1, max_new=10)
+    assert res[rids[0]].tokens == ref[0].tokens[:6]
+    assert res[rids[1]].tokens == ref[1].tokens[:10]
+    assert res[rids[2]].tokens == ref[0].tokens[:8]
+    assert res[rids[2]].steps == 8
+
+
+def test_spec_scheduler_rejects_mixed_frames(ladder, mel):
+    tiny, tp, base, bp = ladder
+    v = ServeEngine(base, bp, max_len=64, quant="none", eos_id=-1)
+    sch = SpecScheduler(v.speculative(tiny, tp, k=2), n_slots=4)
+    sch.submit(mel[0], max_new=4)
+    sch.submit(np.zeros((8, tiny.n_mels), np.float32), max_new=4)
+    with pytest.raises(ValueError, match="frame"):
+        sch.run()
+
+
+# ---------------------------------------------------------------------------
+# backend forcing composition (the CI xla_ref matrix leg)
+# ---------------------------------------------------------------------------
+
+def test_spec_parity_under_backend_forcing(ladder, mel, monkeypatch):
+    """REPRO_BACKEND=xla_ref outranks both the draft's pin and the
+    verifier's routing (DESIGN.md §12.2) — parity and the ledger split
+    must survive the forcing."""
+    monkeypatch.setenv("REPRO_BACKEND", "xla_ref")
+    tiny, tp, base, bp = ladder
+    off = OffloadEngine(interpret=True)
+    v = ServeEngine(base, bp, max_len=64, quant="q8_0", offload=off,
+                    eos_id=-1)
+    ref = v.transcribe(mel, sot_id=1, max_new=6)
+    spec = v.speculative(tiny, tp, k=3)
+    got = spec.transcribe(mel, sot_id=1, max_new=6)
+    assert [r.tokens for r in ref] == [g.tokens for g in got]
+    s = off.stats
+    # forcing retargets every forceable main segment; only the structural
+    # host-residual arm (forceable=False) may remain (DESIGN.md §12.2)
+    assert set(s.by_backend) <= {"xla_ref", "host_residual"}
+    assert "pallas_tpu" not in s.by_backend
+    total = s.offloaded_flops + s.fallback_flops + s.residual_flops
+    assert sum(s.by_role.values()) == total
