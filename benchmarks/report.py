@@ -56,6 +56,9 @@ BENCHMARK_INDEX = [
      "telemetry on/off lockstep drain (≤3% step overhead + §16.2 exactness)"),
     ("speculative", "§5.1 E2E / DESIGN.md §17",
      "tiny-draft speculative decode vs plain greedy (token parity + >1.5x)"),
+    ("paged_speculative", "§5.1 E2E / DESIGN.md §17.4",
+     "speculative rounds over continuous/paged serving (parity under "
+     "admission + preemption)"),
 ]
 
 

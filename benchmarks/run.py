@@ -13,7 +13,8 @@ import traceback
 from benchmarks import (
     backend_matrix, burst_sweep, calibration_error, continuous_batching,
     coverage_cdf, decode_throughput, exec_breakdown, lmm_latency, lmm_power,
-    multi_utterance, paged_serving, pdp_cross_platform, profile_shares,
+    multi_utterance, paged_serving, paged_speculative, pdp_cross_platform,
+    profile_shares,
     q8_reconstruction, sharded_serving, speculative, telemetry_overhead,
     tune_sweep)
 
@@ -39,6 +40,8 @@ SUITES = [
     ("paged_serving (§5.1 / DESIGN.md §15)", paged_serving.run, True),
     ("telemetry_overhead (DESIGN.md §16)", telemetry_overhead.run, True),
     ("speculative (§5.1 / DESIGN.md §17)", speculative.run, True),
+    ("paged_speculative (§5.1 / DESIGN.md §17.4)", paged_speculative.run,
+     True),
 ]
 
 

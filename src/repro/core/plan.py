@@ -212,7 +212,13 @@ def plan_key(phase: str, quant: Optional[str], batch: int,
     same batch — draft, verify and greedy plans must never share a
     ``PlanCache`` entry, and the role tag is what the ledger's
     per-role FLOP attribution keys commits by. ``role=None``/``k=None``
-    leave single-model keys byte-identical."""
+    leave single-model keys byte-identical.
+
+    The qualifiers compose (DESIGN.md §17.4): a paged speculative verify
+    window keys ``(..., ("pages", geom), ("role", "verify"), ("k", k))``
+    — paged x role x k programs all land in disjoint entries, so the
+    round-boundary schedulers (serve/speculative.py) never reuse a
+    contiguous or plain-greedy plan for a paged window."""
     base = (phase, quant, batch, *extra)
     sig = mesh_signature(mesh) if hasattr(mesh, "axis_names") else mesh
     if sig is not None:

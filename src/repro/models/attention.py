@@ -342,6 +342,40 @@ def dequantize_kv(qs: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
     return (qs.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
+def paged_window_update(pages: jax.Array, block_table: jax.Array,
+                        length: jax.Array, val: jax.Array) -> jax.Array:
+    """Scatter a per-row W-token window into the page arena (DESIGN.md
+    §15.2/§17.4). ``val`` is (B, W, Hkv, D); row b's window position j
+    lands at logical position ``length[b] + j``, i.e. physical page
+    ``block_table[b, (length[b]+j) // page]`` offset ``(length[b]+j) %
+    page`` — a window may straddle a page boundary, so each window entry
+    resolves its own (page, offset) pair. Active rows' pages are
+    CoW-private (paging.py ensures this in the pre-round capacity pass),
+    so scatter indices never collide across rows; free rows' table
+    entries all point at trash page 0, whose contents are never read.
+    The logical-page index clamps to the table width like the W=1 path:
+    in-contract callers (``length + W <= capacity``, enforced by the
+    schedulers' admission guard) never hit the clamp on an active row."""
+    ps = pages.shape[1]
+    n_log = block_table.shape[1]
+    w = val.shape[1]
+    pos = length[:, None] + jnp.arange(w)[None, :]          # (B, W)
+    lp = jnp.minimum(pos // ps, n_log - 1)
+    off = pos % ps
+    phys = jnp.take_along_axis(block_table, lp, axis=1)     # (B, W)
+    return pages.at[phys, off].set(val.astype(pages.dtype))
+
+
+def paged_window_gather(pages: jax.Array,
+                        block_table: jax.Array) -> jax.Array:
+    """Gather each row's pages into its contiguous (n_log*page, ...)
+    view — token t sits at gathered position t, so downstream validity
+    masks are identical to the contiguous layout (token-exact)."""
+    b, n_log = block_table.shape
+    ps = pages.shape[1]
+    return pages[block_table].reshape(b, n_log * ps, *pages.shape[2:])
+
+
 def _cache_update(buf: jax.Array, val: jax.Array,
                   length: jax.Array) -> jax.Array:
     """Write ``val``'s entries per row starting at that row's position.
@@ -392,34 +426,25 @@ def decode_attention(p: dict, cfg: ModelConfig, x: jax.Array,
             q = layers.apply_rope(q, pos, cfg.rope_theta)
             knew = layers.apply_rope(knew, pos, cfg.rope_theta)
         if isinstance(cache, PagedKVCache):
-            if w != 1:
-                raise NotImplementedError(
-                    "paged KV decode writes one entry per step; the "
-                    "W-position verify window (DESIGN.md §17.1) is "
-                    "contiguous-layout only")
-            # paged write (DESIGN.md §15.2): each row scatters its new
-            # entry into (physical page of its current logical page,
-            # in-page offset). Free slots' table rows point at trash page
-            # 0, so garbage rows never touch owned memory; active rows
-            # write CoW-private pages, so scatter indices never collide.
-            ps = cache.k_pages.shape[1]
-            n_log = cache.block_table.shape[1]
-            lp = jnp.minimum(cache.length // ps, n_log - 1)
-            off = cache.length % ps
-            phys = jnp.take_along_axis(cache.block_table, lp[:, None],
-                                       axis=1)[:, 0]
-            k_pages = cache.k_pages.at[phys, off].set(
-                knew[:, 0].astype(cache.k_pages.dtype))
-            v_pages = cache.v_pages.at[phys, off].set(
-                vnew[:, 0].astype(cache.v_pages.dtype))
+            # paged write (DESIGN.md §15.2/§17.4): each row scatters its
+            # W new entries through its block-table row — per-entry
+            # (page, offset) resolution, so a verify window straddling a
+            # page boundary lands across both pages. Free slots' table
+            # rows point at trash page 0, so garbage rows never touch
+            # owned memory; active rows write CoW-private pages, so
+            # scatter indices never collide.
+            k_pages = paged_window_update(cache.k_pages, cache.block_table,
+                                          cache.length, knew)
+            v_pages = paged_window_update(cache.v_pages, cache.block_table,
+                                          cache.length, vnew)
             new_cache = PagedKVCache(k_pages, v_pages, cache.block_table,
                                      cache.length + w)
             # paged read: gather each row's pages into its contiguous
             # (n_log*page,) view — token t sits at gathered position t, so
             # the per-row valid mask below is identical to the contiguous
             # layout and the attention math is unchanged (token-exact).
-            k = k_pages[cache.block_table].reshape(b, n_log * ps, hkv, hd)
-            v = v_pages[cache.block_table].reshape(b, n_log * ps, hkv, hd)
+            k = paged_window_gather(k_pages, cache.block_table)
+            v = paged_window_gather(v_pages, cache.block_table)
         elif isinstance(cache, QKVCache):
             # int8 cache path: quantize the new entry, stream int8 +
             # scales, dequantize inline before the MACs (paper-style)

@@ -326,8 +326,21 @@ def set_slot_lengths(state: ServeState, new_len: jax.Array) -> ServeState:
     slot layout the counters are exactly the ``ndim <= 2`` leaves —
     ``step`` (B,) and layer-stacked lengths (R, B) — and every data leaf
     is ``ndim >= 3``, so counters broadcast-assign from ``new_len`` and
-    data passes through untouched."""
+    data passes through untouched.
+
+    The paged layout (DESIGN.md §15.2) breaks that structural rule: its
+    block/cross tables are ndim-2 *data* leaves (B, max_pages) int32, so
+    it splices by field name instead — only ``length`` (R, B) and
+    ``step`` rewind; the tables and page arenas pass through untouched
+    (rejected-suffix *pages* are released host-side by the paged
+    scheduler's post-round trim, DESIGN.md §17.4)."""
     new_len = jnp.asarray(new_len, jnp.int32)
+    ls = state.layer_states
+    if isinstance(ls, whisper.WhisperPagedDecodeState):
+        ls = ls._replace(
+            length=jnp.broadcast_to(new_len[None, :], ls.length.shape))
+        return ServeState(layer_states=ls,
+                          step=jnp.broadcast_to(new_len, state.step.shape))
 
     def conv(a):
         if a.ndim == 1:                       # (B,) unstacked counter

@@ -225,21 +225,19 @@ def init_whisper_decode_state(params: dict, cfg: ModelConfig, memory: jax.Array,
         cross_kv=precompute_cross_kv(params, cfg, memory, engine=engine))
 
 
-def _decode_step_paged(params: dict, cfg: ModelConfig, token: jax.Array,
-                       state: WhisperPagedDecodeState, *, engine=None
-                       ) -> Tuple[jax.Array, WhisperPagedDecodeState]:
-    """Paged twin of ``decode_step`` (DESIGN.md §15.2): self-KV
-    reads/writes go through the per-slot block table (see
-    ``attention.PagedKVCache``) and each layer's cross-KV is gathered from
-    its pages back into the contiguous (B, F, Hkv, hd) view — F is an
-    exact multiple of the cross page size (pool invariant), so position t
-    of the gathered view IS position t of the contiguous one and the
-    attention math (hence every token) is unchanged."""
-    x = layers.embed(params["embed"], token)
-    pos = state.length[0]                       # (B,) per-slot positions
-    table = params["dec_pos"]["table"]
-    x = x + jnp.take(table, pos, axis=0)[:, None].astype(x.dtype)
-    b = token.shape[0]
+def _paged_stack(params: dict, cfg: ModelConfig, x: jax.Array,
+                 state: WhisperPagedDecodeState, *, engine=None
+                 ) -> Tuple[jax.Array, WhisperPagedDecodeState]:
+    """Shared paged decoder-block stack (DESIGN.md §15.2/§17.4) over a
+    (B, W, d) embedded+positioned window: self-KV reads/writes go through
+    the per-slot block table (see ``attention.PagedKVCache`` — W > 1
+    scatters every window entry through its own (page, offset) pair) and
+    each layer's cross-KV is gathered from its pages back into the
+    contiguous (B, F, Hkv, hd) view — F is an exact multiple of the cross
+    page size (pool invariant), so position t of the gathered view IS
+    position t of the contiguous one and the attention math (hence every
+    token) is unchanged."""
+    b = x.shape[0]
     hkv, hd = cfg.num_kv_heads, cfg.head_dim
     bt, ct = state.block_table, state.cross_table
 
@@ -277,6 +275,35 @@ def _decode_step_paged(params: dict, cfg: ModelConfig, token: jax.Array,
     return logits, WhisperPagedDecodeState(
         self_k=nk, self_v=nv, cross_k=state.cross_k, cross_v=state.cross_v,
         block_table=bt, cross_table=ct, length=nl)
+
+
+def _decode_step_paged(params: dict, cfg: ModelConfig, token: jax.Array,
+                       state: WhisperPagedDecodeState, *, engine=None
+                       ) -> Tuple[jax.Array, WhisperPagedDecodeState]:
+    """Paged twin of ``decode_step``: embed + per-slot position, then the
+    shared paged stack at W=1."""
+    x = layers.embed(params["embed"], token)
+    pos = state.length[0]                       # (B,) per-slot positions
+    table = params["dec_pos"]["table"]
+    x = x + jnp.take(table, pos, axis=0)[:, None].astype(x.dtype)
+    return _paged_stack(params, cfg, x, state, engine=engine)
+
+
+def _verify_step_paged(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                      state: WhisperPagedDecodeState, *, engine=None
+                      ) -> Tuple[jax.Array, WhisperPagedDecodeState]:
+    """Paged twin of ``verify_step`` (DESIGN.md §17.4): the W-token
+    verify window scores in ONE forward through the shared paged stack —
+    window position j reads its learned positional row at ``length[b] +
+    j`` and its self-KV entry scatters through the block table, so the
+    logits match the contiguous verify bit-for-bit."""
+    w = tokens.shape[1]
+    x = layers.embed(params["embed"], tokens)
+    pos = state.length[0]                       # (B,) per-slot positions
+    table = params["dec_pos"]["table"]
+    posw = pos[:, None] + jnp.arange(w)[None, :]
+    x = x + jnp.take(table, posw, axis=0).astype(x.dtype)
+    return _paged_stack(params, cfg, x, state, engine=engine)
 
 
 def _decoder_stack(params: dict, cfg: ModelConfig, x: jax.Array,
@@ -353,9 +380,7 @@ def verify_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
     Position handling mirrors ``decode_step``: the layer-0 self-KV length
     is the window base, scalar (lockstep) or per-row (slot layout)."""
     if isinstance(state, WhisperPagedDecodeState):
-        raise NotImplementedError(
-            "the W-position verify window is contiguous-layout only "
-            "(paged KV writes one entry per step, DESIGN.md §15.2)")
+        return _verify_step_paged(params, cfg, tokens, state, engine=engine)
     w = tokens.shape[1]
     x = layers.embed(params["embed"], tokens)
     pos = (state.self_kv.length[0] if state.self_kv.length.ndim

@@ -322,6 +322,13 @@ def serving_registry() -> MetricsRegistry:
             help="accepted/drafted over the engine lifetime")
     r.gauge("repro_spec_verify_traces", help="verify step_fn trace count "
             "(1 = zero retraces after warmup, DESIGN.md §17.3)")
+    # round-boundary admission over speculative rounds (DESIGN.md §17.4)
+    r.counter("repro_spec_admissions_total",
+              help="requests admitted into speculative wave rows at round "
+                   "boundaries (DESIGN.md §17.4)")
+    r.counter("repro_spec_pages_trimmed_total",
+              help="pages released by the post-round rejected-suffix trim "
+                   "on the paged speculative scheduler (DESIGN.md §17.4)")
     r.counter("repro_ledger_calls_total",
               help="ledger-fed call counts by backend")
     return r

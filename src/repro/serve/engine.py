@@ -450,7 +450,14 @@ class ServeEngine:
         registry, DESIGN.md §12.3) while the verifier keeps its own
         pallas/offload routing — and both share ONE ``OffloadLedger`` so
         the by_role split and the §16.2 span exactness cover the whole
-        two-model engine."""
+        two-model engine.
+
+        The returned engine serves three ways: ``transcribe()`` for a
+        one-shot batch, ``.continuous(n_slots, n_frames)`` for
+        round-boundary admission over the §11 slot pool, and
+        ``.paged(n_slots, n_frames, **geom)`` for speculative rounds over
+        the §15 paged arenas with preempt-and-recompute (DESIGN.md
+        §17.4)."""
         from repro.serve.speculative import SpeculativeEngine
         draft_offload = None
         if self.offload is not None:

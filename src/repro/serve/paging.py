@@ -483,6 +483,26 @@ class PagedKVPool:
         self._dirty = True
         self._slots.release(slot)
 
+    def trim_self_pages(self, slot: int, n_keep: int) -> int:
+        """Release ``slot``'s self pages past logical index ``n_keep - 1``
+        — the paged half of the speculative rollback (DESIGN.md §17.4).
+        A rejected verify suffix may have crossed into pages the pre-round
+        capacity pass allocated; after the splice rewinds ``length``, any
+        page whose first position ``lp * page_size`` is at or past the
+        spliced length holds only dead entries, so it returns to the
+        allocator here (trash-pointing the table row like ``release``).
+        Shared (aliased) pages just drop a refcount. Returns the number of
+        references released."""
+        dropped = self._slot_pages[slot][n_keep:]
+        if not dropped:
+            return 0
+        del self._slot_pages[slot][n_keep:]
+        for p in dropped:
+            self.self_alloc.release(p)
+        self._bt[slot, n_keep:] = 0
+        self._dirty = True
+        return len(dropped)
+
     # -- device sync ----------------------------------------------------
     def sync(self) -> None:
         """Upload the host block tables when dirty — called once before
@@ -773,24 +793,33 @@ class PagedScheduler(ContinuousBatchingScheduler):
             self._payloads[rid] = self.queue[-1].payload
         return rid
 
-    def _page_capacity_pass(self) -> None:
+    def _page_capacity_pass(self, w: int = 1) -> None:
+        """Ensure every active slot owns private pages for the next ``w``
+        write positions (``w == 1`` is the plain decode step; ``w == k+1``
+        is a speculative round's verify window, which may straddle a page
+        boundary — the crossing page allocates here, CoW-first, same as
+        the single-step path). Exhaustion preempts the victim losing the
+        fewest pages until the remaining actives fit."""
         pool = self.pool
         for slot in sorted(self._active):
             if slot not in self._active:
                 continue                               # preempted below
             a = self._active[slot]
-            lp = a.steps // pool.page_size             # page written this step
-            if lp >= pool.max_pages:
-                continue                               # writes clamp at capacity
-            while slot in self._active:
-                try:
-                    if len(pool._slot_pages[slot]) <= lp:
-                        pool.alloc_self_page(slot)
-                        continue
-                    pool.ensure_private(slot, lp)      # CoW before the write
+            lp0 = a.steps // pool.page_size            # first page written
+            lp1 = min((a.steps + w - 1) // pool.page_size,
+                      pool.max_pages - 1)              # writes clamp past cap
+            for lp in range(lp0, lp1 + 1):
+                while slot in self._active:
+                    try:
+                        if len(pool._slot_pages[slot]) <= lp:
+                            pool.alloc_self_page(slot)
+                            continue
+                        pool.ensure_private(slot, lp)  # CoW before the write
+                        break
+                    except PagesExhausted:
+                        self._preempt(self._pick_victim())
+                if slot not in self._active:
                     break
-                except PagesExhausted:
-                    self._preempt(self._pick_victim())
 
     def decode_step(self):
         if not self._active:

@@ -43,6 +43,9 @@ import numpy as np
 from repro import obs
 from repro.models import model as model_lib
 from repro.serve.engine import GenerationResult, ServeEngine
+from repro.serve.kvcache import SlotKVPool
+from repro.serve.paging import PagedScheduler
+from repro.serve.scheduler import ContinuousBatchingScheduler, TokenEvent
 
 
 def accept_spec(drafts: np.ndarray, vtoks: np.ndarray
@@ -105,17 +108,28 @@ class SpeculativeEngine:
     accepted: int = 0
 
     def __post_init__(self):
+        # validation runs cheapest-first (plain int compares before config
+        # inspection), so a multiply-wrong setup surfaces its errors in a
+        # fixed, documented order: k, max_len, vocab, family
+        # (tests/test_speculative.py parametrizes every guard)
+        if self.k < 1:
+            raise ValueError("k must be >= 1")
+        cap = min(self.verifier.max_len, self.draft.max_len)
+        if cap < self.k + 2:
+            raise ValueError(
+                f"max_len too small for k={self.k}: one round feeds a "
+                f"k+1-token window plus the bonus entry, so max_len must "
+                f"be >= k + 2 = {self.k + 2} (verifier "
+                f"{self.verifier.max_len}, draft {self.draft.max_len})")
         vc, dc = self.verifier.cfg, self.draft.cfg
-        if vc.family != "audio" or dc.family != "audio":
-            raise NotImplementedError(
-                "speculative serving is wired for the audio family "
-                "(the Whisper ladder, DESIGN.md §17)")
         if dc.vocab_size != vc.vocab_size:
             raise ValueError(
                 f"draft and verifier must share a vocabulary to compare "
                 f"tokens: {dc.vocab_size} != {vc.vocab_size}")
-        if self.k < 1:
-            raise ValueError("k must be >= 1")
+        if vc.family != "audio" or dc.family != "audio":
+            raise NotImplementedError(
+                "speculative serving is wired for the audio family "
+                "(the Whisper ladder, DESIGN.md §17)")
 
     # ------------------------------------------------------------------
     def transcribe(self, mel: np.ndarray, sot_id: int = 1,
@@ -263,6 +277,31 @@ class SpeculativeEngine:
                 for i in range(b)]
 
     # ------------------------------------------------------------------
+    # Round-boundary scheduling (DESIGN.md §17.4) — thin factories over
+    # the mixin schedulers below; transcribe() stays the one-shot path.
+    # ------------------------------------------------------------------
+    def continuous(self, n_slots: int = 4,
+                   n_frames: Optional[int] = None
+                   ) -> "SpecContinuousScheduler":
+        """A continuous-batching scheduler that decodes in speculative
+        rounds (DESIGN.md §17.4): queued utterances admit into freed wave
+        rows at round boundaries — the rollback splice freezes finished
+        rows at ``used = 0``, so a round boundary is a safe admission
+        point exactly like the §11 between-steps boundary."""
+        return SpecContinuousScheduler(self, n_slots=n_slots,
+                                      n_frames=n_frames)
+
+    def paged(self, n_slots: int = 4, n_frames: Optional[int] = None,
+              **page_cfg) -> "PagedSpecScheduler":
+        """Speculative rounds over the §15 paged KV pool: the verify
+        window reads/writes through the block tables (multi-entry
+        scatter), the pre-round capacity pass allocates any page the
+        window will cross into (CoW-first, preempting when the arena is
+        dry), and the post-round trim releases pages a rejected suffix
+        crossed into."""
+        return PagedSpecScheduler(self, n_slots=n_slots, n_frames=n_frames,
+                                  **page_cfg)
+
     def acceptance_rate(self) -> float:
         return self.accepted / max(self.drafted, 1)
 
@@ -287,10 +326,11 @@ class SpecScheduler:
     compiled shape per (wave width, frame count), short waves padded with
     zero-mel rows — so steady-state serving reuses the engine's compiled
     draft/verify programs across waves. Deliberately simpler than the
-    continuous-batching scheduler (DESIGN.md §11): speculative rounds
-    advance rows by *different* amounts, so mid-flight admission would
-    re-prefill anyway; run-to-completion waves keep the zero-retrace and
-    token-exactness guarantees without a slot pool."""
+    continuous-batching scheduler (DESIGN.md §11): run-to-completion
+    waves keep the zero-retrace and token-exactness guarantees without a
+    slot pool, which makes this the parity REFERENCE the round-boundary
+    schedulers below (``SpecContinuousScheduler``/``PagedSpecScheduler``,
+    DESIGN.md §17.4) are gated against."""
     engine: SpeculativeEngine
     n_slots: int = 4
     _queue: List[Tuple[int, np.ndarray, int, int]] = field(
@@ -336,3 +376,322 @@ class SpecScheduler:
                     tokens=row, prefill_s=r.prefill_s,
                     decode_s=r.decode_s, steps=len(row))
         return out
+
+
+# ---------------------------------------------------------------------------
+# Round-boundary continuous/paged scheduling (DESIGN.md §17.4)
+# ---------------------------------------------------------------------------
+class _SpecRoundsMixin:
+    """Speculative rounds over the §11 slot machinery (DESIGN.md §17.4).
+
+    Placed FIRST in the MRO over ``ContinuousBatchingScheduler`` /
+    ``PagedScheduler``: the base class keeps the whole queue / evict /
+    attribution / telemetry apparatus, and this mixin swaps the per-step
+    decode for a speculative ROUND — ``k+1`` draft steps at pool width,
+    ONE verify forward over the (n_slots, k+1) window, the pure
+    ``accept_spec`` rule, and one rollback splice per model. A round
+    boundary is a safe admission point exactly like the §11 between-steps
+    boundary: the splice freezes finished rows at ``used = 0``, so a
+    freed slot's garbage rows never advance and the next ``admit()`` can
+    overwrite them whole.
+
+    The draft model mirrors the verifier's slot pool in a contiguous
+    ``SlotKVPool`` whose own free list is never consulted — slot ids ARE
+    the verifier pool's slot ids, ``insert()`` writes any row, and a
+    row's lifetime is its verifier slot's lifetime. Both models roll back
+    through the one shared ``_rollback`` jit, so each keeps one compiled
+    splice per state structure.
+
+    Attribution follows §11.3 unchanged: each round's wall time splits
+    evenly over the slots active that round, draft admissions (prefill +
+    preemption replay) land on the owning request AND the independent
+    ``_busy_s`` accumulator, so per-request PDP still sums to the batch
+    total. Single-device only: the rollback splice carries no sharded
+    out_shardings yet (mesh composition stays with ``SpecScheduler``)."""
+
+    def _init_spec(self, spec: SpeculativeEngine) -> None:
+        v, d = spec.verifier, spec.draft
+        if v.mesh is not None or d.mesh is not None:
+            raise NotImplementedError(
+                "speculative round scheduling is single-device: the "
+                "rollback splice has no sharded out_shardings — use "
+                "SpecScheduler waves on a mesh")
+        self.spec = spec
+        self._draft_pool = SlotKVPool(d.cfg, d._serve_params, self.n_slots,
+                                      d.max_len, n_frames=self.n_frames)
+        self._draft_step_plan = None
+        self._verify_plan = None
+
+    # -- admission (round boundary == between-steps boundary) -----------
+    def submit(self, payload, max_new: int = 32, sot_id: int = 1) -> int:
+        spec = self.spec
+        need = max_new + spec.k + 1      # window writes reach pos G + k
+        cap = min(spec.verifier.max_len, spec.draft.max_len)
+        if max_new > 0 and need > cap:
+            raise ValueError(
+                f"max_len must be >= max_new + k + 1 = {need} "
+                f"(verifier {spec.verifier.max_len}, draft "
+                f"{spec.draft.max_len})")
+        return super().submit(payload, max_new=max_new, sot_id=sot_id)
+
+    def admit(self) -> List[int]:
+        # snapshot the queue before the base admit pops it: the draft's
+        # mirror admission needs each request's payload + SOT
+        pend = {q.rid: q for q in self.queue}
+        admitted = super().admit()
+        if admitted:
+            by_rid = {a.rid: slot for slot, a in self._active.items()}
+            for rid in admitted:
+                self._admit_draft(by_rid[rid], pend[rid])
+        return admitted
+
+    def _admit_draft(self, slot: int, req) -> None:
+        """Mirror one admission into the draft pool: a batch-1 prefill,
+        plus the deterministic replay of already-streamed tokens when the
+        request was preempted mid-flight. Afterwards the draft row holds
+        KV for ``[SOT, e_0..e_{L-2}]`` at length L with pending token
+        ``e_{L-1}`` — the same invariant every speculative round
+        maintains on the verifier slot, so drafting resumes seamlessly."""
+        d = self.spec.draft
+        tele = self.telemetry
+        a = self._active[slot]
+        tokens = list(a.tokens)          # non-empty only after preemption
+        payload = jnp.asarray(req.payload)
+        plan = d._plan(d._key("prefill", 1, self.n_frames), d._prefill_fn,
+                       d._serve_params, payload)
+        # the ledger span tightly scopes the draft-side prefill + replay
+        # exec and commits, preserving §16.2 span exactness (the draft
+        # shares the verifier's ledger, so unclaimed commits here would
+        # break ledger_consistent on the serving telemetry)
+        with obs.maybe_span(tele, "spec_draft_admit", cat="lifecycle",
+                            track=obs.request_track(a.rid), rid=a.rid,
+                            ledger=True):
+            t0 = time.perf_counter()
+            _, state = d._prefill_jit(d._serve_params, payload)
+            if d.offload is not None:
+                d.offload.ledger.commit(plan, times=1, role="draft")
+            if tokens:
+                inputs = [req.sot_id] + tokens[:-1]
+                tok0 = jnp.full((1, 1), inputs[0], jnp.int32)
+                rplan = d._plan(d._key("step", 1, self.n_frames,
+                                       role="draft"),
+                                d._decode_fn, d._serve_params, tok0, state)
+                for t in inputs:
+                    _, state = d._decode_jit(d._serve_params,
+                                             jnp.full((1, 1), t, jnp.int32),
+                                             state)
+                if d.offload is not None:
+                    d.offload.ledger.commit(rplan, times=len(inputs),
+                                            role="draft")
+            state = jax.block_until_ready(state)
+            wall = time.perf_counter() - t0
+        self._busy_s += wall
+        a.prefill_s += wall
+        self._draft_pool.insert(slot, state)
+        if tele is not None:
+            tele.instant("spec_admit", rid=a.rid, slot=slot,
+                         replayed=len(tokens))
+            tele.inc("repro_spec_admissions_total")
+
+    # -- layout hooks (overridden by the paged subclass) ----------------
+    def _pre_round(self, w: int) -> None:
+        """Capacity hook before the round's W writes — a no-op on the
+        contiguous pool (slots own max_len up front)."""
+
+    def _evict_slot(self, slot: int, rid: int) -> None:
+        self.pool.release(slot, reset=False)
+
+    def _post_round(self, new_len: np.ndarray) -> None:
+        """Rollback hook after the length splice — a no-op on the
+        contiguous pool (stale window entries just get overwritten)."""
+
+    # -- the speculative round ------------------------------------------
+    def _ensure_step_plan(self) -> None:
+        if self._step_plan_ready:
+            return
+        spec = self.spec
+        v, d, k = spec.verifier, spec.draft, spec.k
+        token = jnp.zeros((self.n_slots, 1), jnp.int32)
+        self._draft_step_plan = d._plan(
+            d._key("step", self.n_slots, self.n_frames, role="draft"),
+            d._decode_fn, d._serve_params, token, self._draft_pool.state)
+        window = jnp.zeros((self.n_slots, k + 1), jnp.int32)
+        self._verify_plan = v._plan(
+            v._key("verify", self.n_slots, self.n_frames,
+                   pages=getattr(self.pool, "plan_geometry", None),
+                   role="verify", k=k),
+            v._verify_fn, v._serve_params, window, self.pool.state)
+        self._step_plan_ready = True
+
+    def decode_step(self) -> List[TokenEvent]:
+        """One speculative round at pool width. Emits up to ``k+1``
+        ``TokenEvent``s per active slot (each request's event stream
+        stays ordered by its per-request ``step``); finished requests
+        evict exactly as in the base scheduler, and their rows freeze at
+        length 0 through the rollback splice."""
+        if not self._active:
+            return []
+        spec = self.spec
+        v, d, k = spec.verifier, spec.draft, spec.k
+        self._pre_round(k + 1)
+        if not self._active:             # capacity pass preempted them all
+            return []
+        self._ensure_step_plan()
+        self._note_kv_usage()
+        tele = self.telemetry
+        if tele is not None:
+            h = tele.ledger_open()
+        t0 = time.perf_counter()
+        dpool = self._draft_pool
+        d_state = dpool.state
+        # k draft steps; the k+1-th feed writes d_k's KV entry so a full
+        # accept leaves the draft cache consistent (DESIGN.md §17.1)
+        dt = self._tokens
+        dtoks = []
+        for _ in range(k):
+            dt, _, d_state = d._step_jit(d._serve_params, dt, self._done0,
+                                         d_state)
+            dtoks.append(dt)
+        _, _, d_state = d._step_jit(d._serve_params, dtoks[-1], self._done0,
+                                    d_state)
+        dpool.state = d_state
+        # ONE verify forward over the whole window, then the round's
+        # single host sync
+        window = jnp.concatenate([self._tokens] + dtoks, axis=1)
+        vlogits, v_state = v._verify_jit(v._serve_params, window,
+                                         self.pool.state)
+        self.pool.state = v_state
+        vtoks = v._argmax(vlogits)
+        vt, win = jax.device_get((vtoks, window))
+        dt_s = time.perf_counter() - t0
+        self._busy_s += dt_s
+        if d.offload is not None:
+            d.offload.ledger.commit(self._draft_step_plan, times=k + 1,
+                                    role="draft")
+        if v.offload is not None:
+            v.offload.ledger.commit(self._verify_plan, times=1,
+                                    role="verify")
+        if tele is not None:
+            tele.ledger_close(h, "spec_round", cat="step",
+                              args={"active": len(self._active)})
+        accept_len, committed, n_emit = accept_spec(win[:, 1:], vt)
+        share = dt_s / len(self._active)
+        now = time.perf_counter()
+        eos = v.eos_id
+        events: List[TokenEvent] = []
+        new_len = np.zeros(self.n_slots, np.int64)
+        pending = np.zeros(self.n_slots, np.int64)
+        drafted = len(self._active) * k
+        accepted = 0
+        for slot in sorted(self._active):
+            a = self._active[slot]
+            a.decode_s += share
+            accepted += int(accept_len[slot])
+            done = False
+            for t in committed[slot, :n_emit[slot]]:
+                tok = int(t)
+                a.tokens.append(tok)
+                a.steps += 1
+                if a.steps == 1 and a.ttft_s == 0.0 and a.submit_t > 0.0:
+                    a.ttft_s = now - a.submit_t
+                    if tele is not None:
+                        self._buf_ttft.append(a.ttft_s)
+                done = (a.steps >= a.max_new
+                        or (eos is not None and tok == eos))
+                events.append(TokenEvent(a.rid, tok, a.steps, done))
+                if done:
+                    break
+            # fed == emitted per row: the splice target is the emitted
+            # count, and the next round's feed is the last emitted token
+            # (== the verifier's token at the mismatch/bonus position)
+            new_len[slot] = a.steps
+            pending[slot] = a.tokens[-1]
+            if done:
+                self.finished[a.rid] = GenerationResult(
+                    tokens=a.tokens, prefill_s=a.prefill_s,
+                    decode_s=a.decode_s, steps=a.steps,
+                    queue_wait_s=a.queue_wait_s, ttft_s=a.ttft_s)
+                if tele is not None:
+                    tele.instant("evict", rid=a.rid)
+                    tele.end(a.rid, "decode", steps=a.steps)
+                    self._buf_finished += 1
+                del self._active[slot]
+                self._evict_slot(slot, a.rid)
+                new_len[slot] = 0        # freeze the freed row
+                pending[slot] = 0
+        nl = jnp.asarray(new_len, jnp.int32)
+        self.pool.state = _rollback(self.pool.state, nl)
+        dpool.state = _rollback(dpool.state, nl)
+        self._post_round(new_len)
+        self._tokens = jnp.asarray(pending[:, None].astype(np.int32))
+        spec.rounds += 1
+        spec.drafted += drafted
+        spec.accepted += accepted
+        if tele is not None:
+            self._buf_tokens += len(events)
+            self._buf_steps.append(dt_s)
+            self._buf_shares.append(share)
+            tele.inc("repro_spec_rounds_total")
+            tele.inc("repro_spec_drafted_total", drafted)
+            tele.inc("repro_spec_accepted_total", accepted)
+            g = (len(self.queue), len(self._active), v._verify_traces,
+                 self.kv_used_peak)
+            if g != self._gauge_state:
+                self._gauge_state = g
+                gq, gs, gt, gu = self._step_gauges
+                gq.set(g[0])
+                gs.set(g[1])
+                gt.set(g[2])
+                gu.set(self.kv_utilization_peak)
+        return events
+
+
+class SpecContinuousScheduler(_SpecRoundsMixin, ContinuousBatchingScheduler):
+    """Continuous batching in speculative rounds over the contiguous slot
+    pool (DESIGN.md §17.4) — build via ``SpeculativeEngine.continuous()``."""
+
+    def __init__(self, spec: SpeculativeEngine, n_slots: int = 4,
+                 n_frames: Optional[int] = None):
+        super().__init__(spec.verifier, n_slots=n_slots, n_frames=n_frames)
+        self._init_spec(spec)
+
+
+class PagedSpecScheduler(_SpecRoundsMixin, PagedScheduler):
+    """Speculative rounds over the §15 paged KV pool — build via
+    ``SpeculativeEngine.paged()``. Three paged-specific moves per round:
+    the pre-round capacity pass ensures private pages for all ``k+1``
+    window positions (a window may straddle a page boundary — the
+    crossing page allocates here, preempting the cheapest victim when the
+    arena is dry), the verify window scatters through the block tables
+    (``attention.paged_window_update``), and the post-round trim releases
+    any page the REJECTED suffix crossed into, so arena accounting is
+    exact after every round. The draft side stays contiguous: drafts are
+    the cheap model, whose whole pool is smaller than one verifier arena;
+    preempted requests replay into BOTH models on re-admission."""
+
+    def __init__(self, spec: SpeculativeEngine, n_slots: int = 4,
+                 n_frames: Optional[int] = None, **page_cfg):
+        super().__init__(spec.verifier, n_slots=n_slots, n_frames=n_frames,
+                         **page_cfg)
+        self._init_spec(spec)
+
+    def _pre_round(self, w: int) -> None:
+        self._page_capacity_pass(w)
+        self.pool.sync()
+
+    def _evict_slot(self, slot: int, rid: int) -> None:
+        self.pool.release(slot, reset=False)
+        self._payloads.pop(rid, None)
+
+    def _post_round(self, new_len: np.ndarray) -> None:
+        # release pages the rejected suffix crossed into: after the
+        # splice, pages whose first position sits at/past the new length
+        # hold only dead entries (DESIGN.md §17.4)
+        pool = self.pool
+        released = 0
+        for slot in sorted(self._active):
+            keep = max(-(-int(new_len[slot]) // pool.page_size), 1)
+            released += pool.trim_self_pages(slot, keep)
+        if released and self.telemetry is not None:
+            self.telemetry.instant("spec_trim", pages=released)
+            self.telemetry.inc("repro_spec_pages_trimmed_total", released)

@@ -1,0 +1,106 @@
+"""Property suite for the multi-entry paged window scatter/gather
+(DESIGN.md §15.2/§17.4, via the tests/_hyp.py optional-hypothesis shim):
+writing a W-token verify window through a block table and gathering it
+back must be bit-identical to ``_cache_update`` on the contiguous
+layout — for ANY in-contract (page_size, W, length) combination,
+including windows that straddle page boundaries and W > page_size.
+Pinned deterministic examples cover the named edge cases so the
+contract holds even when hypothesis is absent."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hyp import given, settings, st
+
+from repro.models.attention import (_cache_update, paged_window_gather,
+                                    paged_window_update)
+
+HKV, HD = 2, 3
+
+
+def _arena(b, n_log, ps, seed):
+    """A private-page arena: B rows x n_log logical pages, each row's
+    table pointing at distinct physical pages (page 0 is the trash
+    page), pre-filled with a deterministic pattern."""
+    rng = np.random.default_rng(seed)
+    n_phys = 1 + b * n_log
+    pages = rng.standard_normal((n_phys, ps, HKV, HD)).astype(np.float32)
+    bt = (1 + np.arange(b * n_log)).reshape(b, n_log).astype(np.int32)
+    return jnp.asarray(pages), jnp.asarray(bt)
+
+
+def _run_pair(ps, n_log, lengths, w, seed):
+    """Drive both layouts from the same state and window; return
+    (contiguous buffer, gathered paged view) for comparison."""
+    b = len(lengths)
+    pages, bt = _arena(b, n_log, ps, seed)
+    length = jnp.asarray(np.asarray(lengths, np.int32))
+    rng = np.random.default_rng(seed + 1)
+    val = jnp.asarray(rng.standard_normal((b, w, HKV, HD)).astype(np.float32))
+
+    # contiguous reference: same initial contents via the gather identity
+    buf = paged_window_gather(pages, bt)
+    ref = _cache_update(buf, val, length)
+
+    got_pages = paged_window_update(pages, bt, length, val)
+    got = paged_window_gather(got_pages, bt)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+    # untouched physical pages (trash page 0 included) stay bit-identical
+    touched = set()
+    for row, ln in enumerate(lengths):
+        for j in range(w):
+            touched.add(int(bt[row, (ln + j) // ps]))
+    untouched = sorted(set(range(pages.shape[0])) - touched)
+    np.testing.assert_array_equal(np.asarray(pages)[untouched],
+                                  np.asarray(got_pages)[untouched])
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=1, max_value=6),      # page_size
+       st.integers(min_value=1, max_value=5),      # logical pages per row
+       st.integers(min_value=1, max_value=8),      # window width W
+       st.integers(min_value=1, max_value=4),      # batch rows
+       st.integers(min_value=0, max_value=10 ** 6),
+       st.integers(min_value=0, max_value=10 ** 6))
+def test_paged_window_matches_contiguous(ps, n_log, w, b, lseed, seed):
+    """Property: paged scatter+gather == contiguous ``_cache_update``
+    for any in-contract geometry (``length + W <= capacity``), any
+    per-row lengths, including boundary-straddling and W > page_size."""
+    cap = n_log * ps
+    if w > cap:
+        w = cap
+    rng = np.random.default_rng(lseed)
+    lengths = rng.integers(0, cap - w + 1, size=b).tolist()
+    _run_pair(ps, n_log, lengths, w, seed)
+
+
+@pytest.mark.parametrize("ps,n_log,lengths,w", [
+    (4, 3, [3, 0], 3),     # window straddles a page boundary (3..5)
+    (2, 5, [1, 4], 5),     # W > page_size: window spans 3+ pages
+    (4, 2, [4, 0], 4),     # window starts exactly on a boundary
+    (1, 6, [2, 5], 1),     # degenerate page_size=1, plain W=1 step
+    (5, 2, [5, 3], 5),     # fills the second page end-to-end
+])
+def test_paged_window_pinned_examples(ps, n_log, lengths, w):
+    """The named edge cases, pinned: these run even without hypothesis
+    (the shim skip-marks the property test when it is absent)."""
+    _run_pair(ps, n_log, lengths, w, seed=7)
+
+
+def test_paged_window_rows_independent():
+    """Rows with private pages never interfere: writing row 0's window
+    leaves row 1's gathered view bit-identical."""
+    pages, bt = _arena(2, 3, 4, seed=11)
+    length = jnp.asarray(np.asarray([2, 6], np.int32))
+    val = jnp.asarray(np.zeros((2, 3, HKV, HD), np.float32))
+    before = np.asarray(paged_window_gather(pages, bt))
+    out = paged_window_update(pages, bt, length,
+                              val.at[1].set(np.nan))  # row1 writes NaN
+    after = np.asarray(paged_window_gather(out, bt))
+    # row 0's window is zeros, the rest of row 0 untouched
+    np.testing.assert_array_equal(after[0, 2:5], np.zeros((3, HKV, HD)))
+    np.testing.assert_array_equal(after[0, :2], before[0, :2])
+    np.testing.assert_array_equal(after[0, 5:], before[0, 5:])
+    # row 1's NaNs landed only in row 1's window
+    assert np.isnan(after[1, 6:9]).all()
+    np.testing.assert_array_equal(after[1, :6], before[1, :6])

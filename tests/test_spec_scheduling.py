@@ -1,0 +1,234 @@
+"""Round-boundary speculative scheduling (DESIGN.md §17.4): queued
+requests admit into freed wave rows at round boundaries, the paged
+verify window reads/writes through block tables, and preemption under
+speculation replays token-exactly. Every scheduler here is gated
+against TWO references — the run-to-completion ``SpecScheduler`` wave
+and plain greedy on the verifier — because speculative decoding's whole
+contract is that scheduling may change throughput but never tokens."""
+import jax
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs.registry import get_smoke_config
+from repro.core.offload import OffloadEngine
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+from repro.serve.speculative import (PagedSpecScheduler,
+                                     SpecContinuousScheduler, SpecScheduler,
+                                     SpeculativeEngine)
+
+N_FRAMES = 16
+K = 3
+
+
+@pytest.fixture(scope="module")
+def ladder():
+    tiny = get_smoke_config("whisper-tiny")
+    base = get_smoke_config("whisper-base")
+    tp = M.init_params(jax.random.PRNGKey(0), tiny)
+    bp = M.init_params(jax.random.PRNGKey(1), base)
+    return tiny, tp, base, bp
+
+
+@pytest.fixture(scope="module")
+def workload(ladder):
+    """Six batch-1 utterances with randomized lengths (seeded): varied
+    ``max_new`` is what makes rows finish at different rounds, so
+    round-boundary admission actually exercises freed-row reuse."""
+    tiny = ladder[0]
+    rng = np.random.default_rng(42)
+    mels = [np.asarray(jax.random.normal(jax.random.PRNGKey(10 + i),
+                                         (1, N_FRAMES, tiny.n_mels)),
+                       np.float32) for i in range(6)]
+    max_news = rng.integers(3, 10, size=6).tolist()
+    return mels, max_news
+
+
+@pytest.fixture(scope="module")
+def greedy_ref(ladder, workload):
+    """Plain greedy on the verifier, one request at a time — the
+    token-exactness ground truth."""
+    _, _, base, bp = ladder
+    mels, max_news = workload
+    v = ServeEngine(base, bp, max_len=64, quant="none", eos_id=-1)
+    return {i: v.transcribe(m, sot_id=1, max_new=n)[0].tokens
+            for i, (m, n) in enumerate(zip(mels, max_news))}
+
+
+@pytest.fixture(scope="module")
+def wave_ref(ladder, workload, greedy_ref):
+    """The run-to-completion SpecScheduler output — the §17.4 parity
+    reference the round-boundary schedulers are gated against."""
+    tiny, tp, base, bp = ladder
+    mels, max_news = workload
+    v = ServeEngine(base, bp, max_len=64, quant="none", eos_id=-1)
+    spec = v.speculative(tiny, tp, k=K)
+    sch = SpecScheduler(spec, n_slots=2)
+    rids = {sch.submit(m, max_new=n): i
+            for i, (m, n) in enumerate(zip(mels, max_news))}
+    out = {rids[r]: res.tokens for r, res in sch.run().items()}
+    assert out == greedy_ref            # the wave reference is itself exact
+    return out
+
+
+def _spec(ladder, **engine_kw):
+    tiny, tp, base, bp = ladder
+    v = ServeEngine(base, bp, max_len=64, eos_id=-1, **engine_kw)
+    return v, v.speculative(tiny, tp, k=K)
+
+
+def _drive_with_midflight(sch, workload):
+    """Submit half the workload, run one round, submit the rest mid-
+    flight, drain. Returns ({req index: tokens}, n admitted after the
+    first round) so callers can assert round-boundary admission really
+    re-used freed rows."""
+    mels, max_news = workload
+    rids = {}
+    for i in range(3):
+        rids[sch.submit(mels[i], max_new=max_news[i])] = i
+    sch.admit()
+    sch.decode_step()
+    for i in range(3, 6):
+        rids[sch.submit(mels[i], max_new=max_news[i])] = i
+    n_before = len(sch._active)
+    out = sch.run()
+    return {rids[r]: res.tokens for r, res in out.items()}, n_before
+
+
+def _assert_attribution_sums(sch):
+    att = sch.attribution()
+    s = sum(att["per_request_pdp_j"].values())
+    assert abs(s - att["batch_pdp_j"]) <= 1e-9 * max(1.0, att["batch_pdp_j"])
+
+
+# ---------------------------------------------------------------------------
+# round-boundary admission on the contiguous pool
+# ---------------------------------------------------------------------------
+def test_continuous_spec_admission_parity(ladder, workload, greedy_ref,
+                                          wave_ref):
+    v, spec = _spec(ladder, quant="none")
+    sch = spec.continuous(n_slots=2, n_frames=N_FRAMES)
+    got, _ = _drive_with_midflight(sch, workload)
+    assert got == greedy_ref
+    assert got == wave_ref
+    # the whole drain compiled exactly one verify and one draft step
+    assert (v._verify_traces, spec.draft._step_traces) == (1, 1)
+    assert spec.rounds > 0 and spec.accepted <= spec.drafted
+    _assert_attribution_sums(sch)
+
+
+def test_spec_submit_rejects_overflowing_request(ladder):
+    """The admission guard is static: a request whose window writes
+    could reach past max_len is rejected at submit, not at round N."""
+    _, spec = _spec(ladder, quant="none")
+    sch = spec.continuous(n_slots=2, n_frames=N_FRAMES)
+    mel = np.zeros((1, N_FRAMES, ladder[0].n_mels), np.float32)
+    with pytest.raises(ValueError, match="max_len"):
+        sch.submit(mel, max_new=64)
+
+
+# ---------------------------------------------------------------------------
+# the paged pool: window scatter through block tables, trim, preemption
+# ---------------------------------------------------------------------------
+def test_paged_spec_admission_parity(ladder, workload, greedy_ref, wave_ref):
+    """Roomy arena: mid-flight admission into freed rows, token parity
+    with BOTH references, the pages x role x k plan key, and a drained
+    allocator afterwards."""
+    v, spec = _spec(ladder, quant="none")
+    sch = spec.paged(n_slots=2, n_frames=N_FRAMES, page_size=4,
+                     n_pages=1 + 2 * 16, cross_page_size=N_FRAMES,
+                     n_cross_pages=3)
+    got, active_after_midflight = _drive_with_midflight(sch, workload)
+    assert got == greedy_ref
+    assert got == wave_ref
+    assert active_after_midflight > 0   # rows were live across admission
+    assert (v._verify_traces, spec.draft._step_traces) == (1, 1)
+    # every page went back to the arena when the last request drained
+    alloc = sch.pool.self_alloc
+    assert alloc.n_allocated == 0
+    assert alloc.n_free == alloc.n_allocatable
+    _assert_attribution_sums(sch)
+
+
+def test_paged_spec_preemption_replay(ladder, workload, greedy_ref):
+    """Tight arena: the pre-round capacity pass hits PagesExhausted
+    mid-round, preempts a victim, and the preempted request's replay is
+    token-exact; pages the rejected suffixes crossed into are released
+    (free + allocated == allocatable after the drain); the whole run
+    still compiles exactly one verify/draft step program."""
+    mels, max_news = workload
+    v, spec = _spec(ladder, quant="none")
+    sch = spec.paged(n_slots=3, n_frames=N_FRAMES, page_size=4,
+                     n_pages=1 + 6, cross_page_size=N_FRAMES,
+                     n_cross_pages=4)
+    rids = {sch.submit(m, max_new=n): i
+            for i, (m, n) in enumerate(zip(mels, max_news))}
+    out = sch.run()
+    got = {rids[r]: res.tokens for r, res in out.items()}
+    assert sch.preemptions > 0
+    assert got == greedy_ref
+    assert (v._verify_traces, spec.draft._step_traces) == (1, 1)
+    alloc = sch.pool.self_alloc
+    assert alloc.n_allocated == 0
+    assert alloc.n_free == alloc.n_allocatable
+    _assert_attribution_sums(sch)
+
+
+def test_paged_spec_q8_offload_by_role(ladder, workload):
+    """q8_0 + offload through the paged speculative path: tokens still
+    match plain greedy on the SAME quantized verifier, and the shared
+    ledger's by_role split sums exactly to the flop totals."""
+    tiny, tp, base, bp = ladder
+    mels, max_news = workload
+    off = OffloadEngine(interpret=True, prefer_pallas=False)
+    v = ServeEngine(base, bp, max_len=64, quant="q8_0", offload=off,
+                    eos_id=-1)
+    ref = {i: v.transcribe(m, sot_id=1, max_new=n)[0].tokens
+           for i, (m, n) in enumerate(zip(mels[:3], max_news[:3]))}
+    spec = v.speculative(tiny, tp, k=K)
+    sch = spec.paged(n_slots=2, n_frames=N_FRAMES, page_size=4,
+                     n_pages=1 + 2 * 16, cross_page_size=N_FRAMES,
+                     n_cross_pages=3)
+    rids = {sch.submit(m, max_new=n): i
+            for i, (m, n) in enumerate(zip(mels[:3], max_news[:3]))}
+    got = {rids[r]: res.tokens for r, res in sch.run().items()}
+    assert got == ref
+    # the verify plan keys paged x role x k disjointly (DESIGN.md §17.4)
+    key = sch._verify_plan.key
+    assert any(q[0] == "pages" for q in key if isinstance(q, tuple))
+    assert ("role", "verify") in key and ("k", K) in key
+    assert key != sch._draft_step_plan.key
+    s = off.stats
+    assert s.by_role.get("draft", 0) > 0 and s.by_role.get("verify", 0) > 0
+    total = s.offloaded_flops + s.fallback_flops + s.residual_flops
+    assert sum(s.by_role.values()) == total
+    _assert_attribution_sums(sch)
+
+
+# ---------------------------------------------------------------------------
+# telemetry: the §16 instants and counters fire on the new paths
+# ---------------------------------------------------------------------------
+def test_spec_scheduling_telemetry(ladder, workload):
+    tiny, tp, base, bp = ladder
+    mels, max_news = workload
+    tele = obs.Telemetry()
+    v = ServeEngine(base, bp, max_len=64, quant="none", eos_id=-1,
+                    telemetry=tele)
+    spec = v.speculative(tiny, tp, k=K)
+    sch = spec.paged(n_slots=2, n_frames=N_FRAMES, page_size=4,
+                     n_pages=1 + 2 * 16, cross_page_size=N_FRAMES,
+                     n_cross_pages=3)
+    rids = [sch.submit(m, max_new=n)
+            for m, n in zip(mels[:4], max_news[:4])]
+    res = sch.run()
+    assert set(res) == set(rids)
+    names = {e.name for e in tele.tracer.events}
+    assert "spec_admit" in names
+    assert "spec_round" in {s.name for s in tele.tracer.spans}
+    m = tele.metrics
+    assert m.counter("repro_spec_admissions_total").value() == len(rids)
+    assert m.counter("repro_spec_rounds_total").value() == spec.rounds
+    assert tele.tracer.all_closed()
+    assert tele.tracer.check_nesting() == []
+    assert tele.tracer.rids_closed == set(rids)

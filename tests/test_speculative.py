@@ -11,7 +11,8 @@ from repro.configs.registry import get_smoke_config
 from repro.core.offload import OffloadEngine
 from repro.models import model as M
 from repro.serve.engine import ServeEngine
-from repro.serve.speculative import SpecScheduler, accept_spec
+from repro.serve.speculative import (SpecScheduler, SpeculativeEngine,
+                                     accept_spec)
 from tests._hyp import given, settings, st
 
 
@@ -176,6 +177,38 @@ def test_spec_vocab_mismatch_rejected(ladder):
     v = ServeEngine(base, bp, max_len=64, quant="none", eos_id=-1)
     with pytest.raises(ValueError, match="vocab"):
         v.speculative(bad, tp, k=4)
+
+
+@pytest.mark.parametrize("case,exc,match", [
+    ("k", ValueError, "k must be >= 1"),
+    ("max_len", ValueError, "max_len too small"),
+    ("vocab", ValueError, "vocabulary"),
+    ("family", NotImplementedError, "audio family"),
+])
+def test_spec_post_init_guards(ladder, case, exc, match):
+    """Every ``__post_init__`` guard fires with its documented exception
+    and message — in the cheapest-first order the constructor checks
+    them (plain int compares before config inspection), so a multiply-
+    wrong setup surfaces the cheap error deterministically."""
+    import dataclasses
+    tiny, tp, base, bp = ladder
+    k, max_len, dcfg = 4, 64, tiny
+    if case == "k":
+        k = 0
+        # also multiply-wrong: tiny max_len would trip the NEXT guard,
+        # proving order — the k guard must win
+        max_len = 3
+    elif case == "max_len":
+        max_len = 5                      # k + 2 = 6 > 5
+    elif case == "vocab":
+        dcfg = dataclasses.replace(tiny, vocab_size=tiny.vocab_size + 16)
+    elif case == "family":
+        dcfg = dataclasses.replace(tiny, family="dense")
+    v = ServeEngine(base, bp, max_len=max_len, quant="none", eos_id=-1)
+    d = ServeEngine(dcfg, tp, max_len=max_len, quant="none", eos_id=-1,
+                    offload=None)
+    with pytest.raises(exc, match=match):
+        SpeculativeEngine(verifier=v, draft=d, k=k)
 
 
 # ---------------------------------------------------------------------------
